@@ -1,0 +1,85 @@
+"""Shared benchmark plumbing: trace construction, run caching, tables."""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.device_model import A100
+from repro.core.simulator import run_policy
+from repro.core.traffic import maf2_like_trace, scale_to_load
+from repro.core.workloads import (INFER_NAMES, TRAIN_NAMES, isolated_time,
+                                  paper_workload)
+
+RESULTS = Path(__file__).parent / "results"
+
+# policy display order (paper Fig. 5)
+FIG5_POLICIES = ("time_slicing", "mps", "mps_priority", "tgs", "tally")
+
+
+def sim_duration_for(hp_name: str, quick: bool = False) -> float:
+    """Longer windows for long-latency inference so p99 has support."""
+    iso = isolated_time(paper_workload(hp_name, 0), A100)
+    if iso < 0.05:
+        return 20.0 if quick else 60.0
+    if iso < 0.5:
+        return 40.0 if quick else 120.0
+    return 120.0 if quick else 300.0
+
+
+def make_trace(hp_name: str, load: float, duration: float, seed: int = 1):
+    hp = paper_workload(hp_name, 0)
+    iso = isolated_time(hp, A100)
+    base = maf2_like_trace(duration=duration * 4, mean_rate=20.0,
+                           burstiness=1.4, level_period=2.0, seed=seed)
+    return scale_to_load(base, iso, load)
+
+
+def run_combo(policy: str, hp_name: str, be_names: Sequence[str],
+              load: float = 0.5, duration: Optional[float] = None,
+              threshold: float = 0.0316e-3, quick: bool = False,
+              seed: int = 1) -> Dict[str, float]:
+    dur = duration or sim_duration_for(hp_name, quick)
+    hp = paper_workload(hp_name, 0)
+    bes = [paper_workload(n, 1 + i) for i, n in enumerate(be_names)]
+    trace = make_trace(hp_name, load, dur, seed)
+    res = run_policy(policy, hp, bes, trace, A100, duration=dur,
+                     threshold=threshold)
+    out = res.summary()
+    out["policy"] = policy
+    out["hp"] = hp_name
+    out["be"] = "+".join(be_names)
+    out["load"] = load
+    return out
+
+
+def cached(path: Path, fn, *, refresh: bool = False):
+    if path.exists() and not refresh:
+        return json.loads(path.read_text())
+    out = fn()
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(out, indent=1))
+    return out
+
+
+def fmt_table(rows: List[Dict], cols: Sequence[str],
+              floatfmt: str = "{:.2f}") -> str:
+    widths = {c: max(len(c), *(len(_fmt(r.get(c), floatfmt))
+                               for r in rows)) for c in cols}
+    head = " | ".join(c.ljust(widths[c]) for c in cols)
+    sep = "-+-".join("-" * widths[c] for c in cols)
+    body = "\n".join(
+        " | ".join(_fmt(r.get(c), floatfmt).ljust(widths[c]) for c in cols)
+        for r in rows)
+    return f"{head}\n{sep}\n{body}"
+
+
+def _fmt(v, floatfmt) -> str:
+    if v is None:
+        return "-"
+    if isinstance(v, float):
+        return floatfmt.format(v)
+    return str(v)

@@ -1,0 +1,102 @@
+"""Figure 5: end-to-end p99 latency + system throughput, all 6x6 workload
+combinations under Time-Slicing / MPS / MPS-Priority / TGS / Tally at 50%
+load (MAF2-style traffic).
+
+Full grid is expensive (the three long-latency inference tasks need long
+simulated windows); ``--quick`` runs the two short-latency HP tasks only.
+Results are cached per (hp, be, policy) so interrupted sweeps resume.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.workloads import INFER_NAMES, TRAIN_NAMES
+from benchmarks.common import (FIG5_POLICIES, RESULTS, cached, fmt_table,
+                               run_combo)
+
+OUT = RESULTS / "fig5"
+
+
+def run_grid(hp_names, be_names, policies=FIG5_POLICIES, load=0.5,
+             quick=False, refresh=False):
+    rows = []
+    for hp in hp_names:
+        for be in be_names:
+            for pol in policies:
+                path = OUT / f"{hp}__{be}__{pol}.json"
+                t0 = time.time()
+                row = cached(path, lambda: run_combo(
+                    pol, hp, [be], load=load, quick=quick),
+                    refresh=refresh)
+                rows.append(row)
+                print(f"[fig5] {hp} + {be} {pol}: "
+                      f"ovh={row['p99_overhead_pct']:.1f}% "
+                      f"sys={row['system_throughput']:.2f} "
+                      f"({time.time() - t0:.0f}s)", flush=True)
+    return rows
+
+
+def summarize(rows):
+    print("\n== Fig. 5: p99 overhead (%) by combo ==")
+    by_combo = {}
+    for r in rows:
+        by_combo.setdefault((r["hp"], r["be"]), {})[r["policy"]] = r
+    table = []
+    for (hp, be), pols in sorted(by_combo.items()):
+        row = {"hp": hp, "be": be}
+        for p in FIG5_POLICIES:
+            if p in pols:
+                row[p] = pols[p]["p99_overhead_pct"]
+        table.append(row)
+    print(fmt_table(table, ("hp", "be") + FIG5_POLICIES, "{:.1f}"))
+
+    print("\n== Fig. 5: averages across combos ==")
+    avg = []
+    for p in FIG5_POLICIES:
+        sel = [r for r in rows if r["policy"] == p]
+        if not sel:
+            continue
+        avg.append({
+            "policy": p,
+            "mean_p99_overhead_pct": float(np.mean(
+                [r["p99_overhead_pct"] for r in sel])),
+            "mean_system_throughput": float(np.mean(
+                [r["system_throughput"] for r in sel])),
+        })
+    print(fmt_table(avg, ("policy", "mean_p99_overhead_pct",
+                          "mean_system_throughput")))
+    paper = {"time_slicing": 252.3, "mps": 345.0, "mps_priority": 195.5,
+             "tgs": 188.9, "tally": 7.2}
+    print("\npaper avg p99 overheads (%):", paper)
+    if any(r["policy"] == "tgs" for r in rows) and \
+            any(r["policy"] == "tally" for r in rows):
+        tgs_t = np.mean([r["system_throughput"] for r in rows
+                         if r["policy"] == "tgs"])
+        tly_t = np.mean([r["system_throughput"] for r in rows
+                         if r["policy"] == "tally"])
+        print(f"tally/tgs system throughput: {tly_t / tgs_t:.2%} "
+              f"(paper: 80.3%)")
+    return avg
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="short-latency HP tasks only")
+    ap.add_argument("--refresh", action="store_true")
+    args = ap.parse_args(argv)
+    hps = (("resnet50-infer", "bert-infer", "yolov6m-infer")
+           if args.quick else INFER_NAMES)
+    rows = run_grid(hps, TRAIN_NAMES, quick=args.quick,
+                    refresh=args.refresh)
+    summarize(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

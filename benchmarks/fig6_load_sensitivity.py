@@ -1,0 +1,119 @@
+"""Figure 6a: load sensitivity — p99 and system throughput vs GPU idle
+time for BERT / Llama-2 inference co-located with BERT/GPT-2/Whisper
+training, under Tally and TGS.
+
+Figure 6b (--timeseries): time-series adaptivity — bursty traffic vs
+real-time p99 and best-effort throughput under every policy.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.device_model import A100
+from repro.core.simulator import run_policy, simulate
+from repro.core.traffic import condensed_timeseries, maf2_like_trace, \
+    scale_to_load
+from repro.core.workloads import isolated_time, paper_workload
+from benchmarks.common import RESULTS, cached, fmt_table, run_combo
+
+OUT = RESULTS / "fig6"
+
+IDLE_GRID = (0.1, 0.3, 0.5, 0.7, 0.9)     # idle = 1 - load
+
+
+def run_sensitivity(quick=False, refresh=False):
+    hps = ("bert-infer",) if quick else ("bert-infer", "llama2-7b-infer")
+    bes = ("bert-train", "gpt2-train", "whisper-train")
+    rows = []
+    for hp in hps:
+        for be in bes:
+            for idle in IDLE_GRID:
+                for pol in ("tally", "tgs"):
+                    path = OUT / f"{hp}__{be}__{pol}__{idle:.1f}.json"
+                    row = cached(path, lambda: run_combo(
+                        pol, hp, [be], load=1.0 - idle, quick=quick),
+                        refresh=refresh)
+                    rows.append(row)
+                    print(f"[fig6a] {hp}+{be} {pol} idle={idle:.0%}: "
+                          f"ovh={row['p99_overhead_pct']:.1f}% "
+                          f"sys={row['system_throughput']:.2f}",
+                          flush=True)
+    return rows
+
+
+def summarize(rows):
+    print("\n== Fig. 6a: p99 slowdown (x) vs idle time ==")
+    table = []
+    for hp in sorted({r["hp"] for r in rows}):
+        for be in sorted({r["be"] for r in rows}):
+            for pol in ("tally", "tgs"):
+                sel = {1.0 - r["load"]: r for r in rows
+                       if r["hp"] == hp and r["be"] == be
+                       and r["policy"] == pol}
+                if not sel:
+                    continue
+                row = {"hp": hp, "be": be, "policy": pol}
+                for idle in IDLE_GRID:
+                    if idle in sel:
+                        row[f"idle{int(idle * 100)}"] = (
+                            1.0 + sel[idle]["p99_overhead_pct"] / 100.0)
+                table.append(row)
+    cols = ("hp", "be", "policy") + tuple(
+        f"idle{int(i * 100)}" for i in IDLE_GRID)
+    print(fmt_table(table, cols, "{:.2f}"))
+
+
+def run_timeseries(refresh=False):
+    """Fig. 6b: 60s bursty window, 1s-binned p99/throughput."""
+    hp = paper_workload("bert-infer", 0)
+    be = paper_workload("bert-train", 1)
+    iso = isolated_time(hp, A100)
+    dur = 60.0
+    base = maf2_like_trace(duration=dur, mean_rate=20.0, burstiness=3.0,
+                           level_period=4.0, seed=7)
+    trace = scale_to_load(base, iso, 0.5)
+    trace = type(trace)(trace.arrivals[trace.arrivals < dur], dur)
+
+    def compute():
+        out = {"traffic": condensed_timeseries(trace, 60).tolist()}
+        for pol in ("tally", "tgs", "mps", "mps_priority", "time_slicing"):
+            res = run_policy(pol, hp, [be], trace, A100, duration=dur)
+            out[pol] = {
+                "p99_ms": res.hp_latency.p99() * 1e3,
+                "ideal_p99_ms": res.hp_ideal_p99 * 1e3,
+                "be_norm_tput": res.be_throughputs.get(
+                    "bert-train", None) and res.be_throughputs[
+                        "bert-train"].normalized(
+                            res.be_isolated_rates["bert-train"]),
+            }
+        return out
+
+    out = cached(OUT / "timeseries.json", compute, refresh=refresh)
+    print("\n== Fig. 6b: 60s bursty window (bert-infer + bert-train) ==")
+    rows = [{"policy": p, **out[p]} for p in out if p != "traffic"]
+    print(fmt_table(rows, ("policy", "p99_ms", "ideal_p99_ms",
+                           "be_norm_tput")))
+    print("traffic (req/s, 1s bins):",
+          out["traffic"][:20], "...")
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--timeseries", action="store_true")
+    ap.add_argument("--refresh", action="store_true")
+    args = ap.parse_args(argv)
+    if args.timeseries:
+        return run_timeseries(refresh=args.refresh)
+    rows = run_sensitivity(quick=args.quick, refresh=args.refresh)
+    summarize(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Figure 7a: scalability with number of best-effort workloads.
+
+One high-priority ResNet50 inference task at 10% load co-located with
+1..10 identical best-effort (offline) ResNet50 inference copies; p99 of
+the HP task must stay flat while system throughput climbs until the GPU
+saturates.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import numpy as np
+
+from repro.core.device_model import A100
+from repro.core.simulator import run_policy
+from repro.core.workloads import isolated_time, paper_workload
+from benchmarks.common import RESULTS, cached, fmt_table, make_trace
+
+OUT = RESULTS / "fig7a.json"
+
+
+def be_copy(i: int):
+    """Offline (best-effort) ResNet50 inference: continuous batches."""
+    w = paper_workload("resnet50-infer", priority=1 + i)
+    # offline inference streams like training: endless iterations
+    return dataclasses.replace(w, name=f"resnet50-offline-{i}",
+                               kind="train")
+
+
+def compute(max_n: int = 10, duration: float = 60.0):
+    hp = paper_workload("resnet50-infer", 0)
+    trace = make_trace("resnet50-infer", 0.10, duration)
+    out = []
+    for n in range(1, max_n + 1):
+        bes = [be_copy(i) for i in range(n)]
+        res = run_policy("tally", hp, bes, trace, A100, duration=duration)
+        s = res.summary()
+        # requests/minute = HP + sum of BE offline batches
+        be_rpm = sum(ts.samples for ts in res.be_throughputs.values()) \
+            / duration * 60.0
+        hp_rpm = res.hp_throughput.samples / duration * 60.0
+        out.append({"n_be": n, "p99_ms": s["p99_ms"],
+                    "ideal_p99_ms": s["ideal_p99_ms"],
+                    "requests_per_min": hp_rpm + be_rpm})
+        print(f"[fig7a] n_be={n}: p99={s['p99_ms']:.2f}ms "
+              f"rpm={hp_rpm + be_rpm:.0f}", flush=True)
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--refresh", action="store_true")
+    ap.add_argument("--max-n", type=int, default=10)
+    args = ap.parse_args(argv)
+    rows = cached(OUT, lambda: compute(args.max_n), refresh=args.refresh)
+    print("\n== Fig. 7a: scaling best-effort workload count (Tally) ==")
+    print(fmt_table(rows, ("n_be", "p99_ms", "ideal_p99_ms",
+                           "requests_per_min")))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Figure 7b: performance decomposition for BERT inference.
+
+Ideal (isolated) vs No-scheduling vs priority scheduling WITHOUT
+transforms (kernel-granularity, Fig. 4 policy) vs full Tally (block-level
+slicing + preemption), across all six best-effort training partners —
+isolating how much of the isolation comes from priority scheduling vs the
+kernel transformations.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.core.workloads import TRAIN_NAMES
+from benchmarks.common import RESULTS, cached, fmt_table, run_combo
+
+OUT = RESULTS / "fig7b"
+
+POLICIES = ("no_sched", "tally_kernel", "tally")
+LABEL = {"no_sched": "no_scheduling",
+         "tally_kernel": "sched_wo_transforms",
+         "tally": "sched_with_transforms"}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--refresh", action="store_true")
+    args = ap.parse_args(argv)
+    rows = []
+    for be in TRAIN_NAMES:
+        row = {"be": be}
+        for pol in POLICIES:
+            path = OUT / f"{be}__{pol}.json"
+            r = cached(path, lambda: run_combo(pol, "bert-infer", [be]),
+                       refresh=args.refresh)
+            row[LABEL[pol]] = 1.0 + r["p99_overhead_pct"] / 100.0
+            row["ideal_p99_ms"] = r["ideal_p99_ms"]
+        rows.append(row)
+        print(f"[fig7b] {be}: " + " ".join(
+            f"{LABEL[p]}={row[LABEL[p]]:.2f}x" for p in POLICIES),
+            flush=True)
+    print("\n== Fig. 7b: BERT p99 slowdown (x) decomposition ==")
+    print(fmt_table(rows, ("be", "ideal_p99_ms") + tuple(
+        LABEL[p] for p in POLICIES)))
+    slow = [r["sched_with_transforms"] for r in rows]
+    print(f"\nfull Tally: mean slowdown {np.mean(slow):.3f}x, worst "
+          f"{np.max(slow):.3f}x (paper: 4.0% mean, 6.2% worst)")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Figure 7c: turnaround-latency threshold sweep.
+
+BERT inference p99 + co-located training throughput across thresholds
+0.01 .. 10 ms; the paper selects 0.0316 ms as the latency/throughput
+sweet spot.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.core.workloads import TRAIN_NAMES
+from benchmarks.common import RESULTS, cached, fmt_table, run_combo
+
+OUT = RESULTS / "fig7c"
+
+THRESHOLDS_MS = (0.01, 0.0316, 0.1, 0.316, 1.0, 10.0)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--refresh", action="store_true")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args(argv)
+    bes = TRAIN_NAMES[:3] if args.quick else TRAIN_NAMES
+    rows = []
+    for th in THRESHOLDS_MS:
+        ovh, tput = [], []
+        for be in bes:
+            path = OUT / f"{be}__{th}.json"
+            r = cached(path, lambda: run_combo(
+                "tally", "bert-infer", [be], threshold=th * 1e-3),
+                refresh=args.refresh)
+            ovh.append(r["p99_overhead_pct"])
+            tput.append(r[f"be_norm_tput/{be}"])
+        rows.append({"threshold_ms": th,
+                     "mean_p99_overhead_pct": float(np.mean(ovh)),
+                     "mean_be_norm_tput": float(np.mean(tput))})
+        print(f"[fig7c] th={th}ms: ovh={rows[-1]['mean_p99_overhead_pct']:.1f}% "
+              f"be_tput={rows[-1]['mean_be_norm_tput']:.3f}", flush=True)
+    print("\n== Fig. 7c: threshold sweep (bert-infer vs training suite) ==")
+    print(fmt_table(rows, ("threshold_ms", "mean_p99_overhead_pct",
+                           "mean_be_norm_tput"), "{:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,122 @@
+"""§5.7 overhead analysis: virtualization, kernel transformation, profiling.
+
+Virtualization — real mode: wall time of kernels launched through the
+TallyServer (interception + queue + dispatch) vs direct execution.
+Transformation — modeled body overhead of sliced/preemptive launch
+configs across the profiled best-effort kernel population, plus a
+real-Pallas measurement on small shapes.
+Profiling — one-time profiling cost vs steady-state execution.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.device_model import A100
+from repro.core.descriptor import build_plain
+from repro.core.profiler import TransparentProfiler, candidate_configs
+from repro.core.simulator import make_measure, price_launch
+from repro.core.workloads import TRAIN_NAMES, paper_workload
+from benchmarks.common import RESULTS, cached, fmt_table
+
+
+def virtualization_overhead() -> dict:
+    """Direct vs through-the-server execution of a real Pallas kernel."""
+    from repro.core.virtualization import TallyServer
+    from repro.kernels.matmul import matmul_desc
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(128, 64)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(64, 64)), jnp.float32)
+    desc = matmul_desc(128, 64, 64, bm=32, bk=32, bn=32)
+    direct = build_plain(desc)
+    direct(a, b)                                   # warm the cache
+    t0 = time.perf_counter()
+    n = 30
+    for _ in range(n):
+        direct(a, b)[0].block_until_ready()
+    t_direct = (time.perf_counter() - t0) / n
+
+    server = TallyServer()
+    hp = server.register("hp", priority=0)
+    job = hp.launch(desc, a, b)                    # warm
+    server.serve_until_idle()
+    job.result(0)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        job = hp.launch(desc, a, b)
+        server.serve_until_idle()
+        job.result(0)
+    t_virt = (time.perf_counter() - t0) / n
+    return {"direct_ms": t_direct * 1e3, "virtualized_ms": t_virt * 1e3,
+            "overhead_pct": 100.0 * (t_virt / t_direct - 1.0)}
+
+
+def transform_overhead() -> dict:
+    """Modeled transformed-vs-default exec time over BE kernels (the
+    paper profiles 10K kernels and reports ~25% average)."""
+    dev = A100
+    measure = make_measure(dev)
+    ratios = []
+    chosen = []
+    for name in TRAIN_NAMES:
+        w = paper_workload(name, 1)
+        prof = TransparentProfiler(measure, dev.sm_count)
+        for k in w.iteration(0):
+            cfg = prof.launch_and_profile(k)
+            base, _ = price_launch(k, type(cfg)("default"), dev)
+            ent = prof.entry(k)
+            ratios.append(ent.exec_time / base)
+            chosen.append(cfg.mode)
+    modes, counts = np.unique(chosen, return_counts=True)
+    return {
+        "kernels_profiled": len(ratios),
+        "mean_overhead_pct": 100.0 * (float(np.mean(ratios)) - 1.0),
+        "p90_overhead_pct": 100.0 * (float(np.percentile(ratios, 90)) - 1),
+        "config_mix": {m: int(c) for m, c in zip(modes, counts)},
+    }
+
+
+def profiling_overhead() -> dict:
+    """One-time profiling time vs one hour of training (per §5.7)."""
+    dev = A100
+    measure = make_measure(dev)
+    total = 0.0
+    for name in TRAIN_NAMES:
+        w = paper_workload(name, 1)
+        prof = TransparentProfiler(measure, dev.sm_count)
+        for k in w.iteration(0):
+            prof.launch_and_profile(k)
+        total += prof.profile_time
+    return {"total_profile_time_s": total,
+            "pct_of_one_hour": 100.0 * total / 3600.0}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--refresh", action="store_true")
+    args = ap.parse_args(argv)
+    out = cached(RESULTS / "overheads.json", lambda: {
+        "virtualization": virtualization_overhead(),
+        "transformation": transform_overhead(),
+        "profiling": profiling_overhead(),
+    }, refresh=args.refresh)
+    print("\n== §5.7 overheads ==")
+    v = out["virtualization"]
+    print(f"virtualization: {v['overhead_pct']:.1f}% "
+          f"(direct {v['direct_ms']:.2f}ms -> virt {v['virtualized_ms']:.2f}ms; "
+          f"paper: ~1% on GPU)")
+    t = out["transformation"]
+    print(f"transformation: mean {t['mean_overhead_pct']:.1f}% over "
+          f"{t['kernels_profiled']} kernels, mix={t['config_mix']} "
+          f"(paper: ~25%)")
+    p = out["profiling"]
+    print(f"profiling: {p['total_profile_time_s']:.1f}s one-time "
+          f"({p['pct_of_one_hour']:.2f}% of an hour-long job)")
+    return out
+
+
+if __name__ == "__main__":
+    main()

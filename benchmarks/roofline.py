@@ -1,0 +1,105 @@
+"""Roofline analysis over the multi-pod dry-run artifacts.
+
+Reads ``benchmarks/results/dryrun/*.json`` (produced by
+``repro.launch.dryrun``) and reports, per (arch x shape x mesh):
+
+    compute    = HLO_FLOPs / peak                (s, per chip)
+    memory     = HLO_bytes / HBM_bw              (s)
+    collective = collective_bytes / ICI_bw       (s)
+    step_bound = max of the three               (the roofline step time)
+    ideal      = MODEL_FLOPS / chips / peak     (perfect-efficiency step)
+    fraction   = ideal / step_bound             (roofline fraction: 1.0 =
+                                                 compute-bound at zero waste)
+
+and flags the three most interesting cells for the §Perf hillclimb:
+worst fraction, most collective-bound, and the paper-representative cell.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import RESULTS, fmt_table
+
+DRY = RESULTS / "dryrun"
+
+
+def load_cells(mesh: str = "single"):
+    cells = []
+    for p in sorted(DRY.glob(f"*__{mesh}.json")):
+        d = json.loads(p.read_text())
+        if d.get("status") != "ok":
+            cells.append(d)
+            continue
+        r = d["roofline"]
+        ideal = d["model"]["model_flops_per_device"] / 197e12
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        d["ideal_s"] = ideal
+        d["step_bound_s"] = bound
+        d["fraction"] = ideal / bound if bound > 0 else 0.0
+        cells.append(d)
+    return cells
+
+
+def table(cells):
+    rows = []
+    for d in cells:
+        if d.get("status") == "skip":
+            rows.append({"arch": d["arch"], "shape": d["shape"],
+                         "note": d["reason"][:40]})
+            continue
+        if d.get("status") != "ok":
+            rows.append({"arch": d["arch"], "shape": d["shape"],
+                         "note": "ERROR " + d.get("error", "")[:40]})
+            continue
+        r = d["roofline"]
+        rows.append({
+            "arch": d["arch"], "shape": d["shape"],
+            "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"],
+            "dominant": r["dominant"],
+            "fraction": d["fraction"],
+            "useful": d["model"]["useful_flop_ratio"],
+            "hbm_GiB": d["per_device_hbm_bytes"] / 2 ** 30,
+            "fits": d["fits_hbm"],
+        })
+    return rows
+
+
+def pick_hillclimb(cells):
+    ok = [d for d in cells if d.get("status") == "ok"]
+    if not ok:
+        return {}
+    worst = min(ok, key=lambda d: d["fraction"])
+    coll = max(ok, key=lambda d: d["roofline"]["collective_s"]
+               / max(d["step_bound_s"], 1e-12))
+    return {
+        "worst_fraction": f"{worst['arch']}/{worst['shape']}",
+        "most_collective_bound": f"{coll['arch']}/{coll['shape']}",
+        # serving co-location is the paper's own scenario: decode cell of a
+        # mainstream dense arch
+        "paper_representative": "qwen2.5-14b/decode_32k",
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single", choices=("single", "multi"))
+    args = ap.parse_args(argv)
+    cells = load_cells(args.mesh)
+    rows = table(cells)
+    print(f"\n== Roofline ({args.mesh}-pod), terms in seconds/step ==")
+    print(fmt_table(rows, ("arch", "shape", "compute_s", "memory_s",
+                           "collective_s", "dominant", "fraction",
+                           "useful", "hbm_GiB", "fits", "note"),
+                    "{:.4f}"))
+    picks = pick_hillclimb(cells)
+    print("\nhillclimb candidates:", json.dumps(picks, indent=1))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Benchmark orchestrator: one module per paper table/figure.
+
+``python -m benchmarks.run``          quick pass over every benchmark
+``python -m benchmarks.run --full``   full grids (hours; results cached)
+
+Individual benchmarks: ``python -m benchmarks.<name>`` — see the table in
+DESIGN.md §6. Roofline reads the dry-run artifacts (run
+``python -m repro.launch.dryrun --all`` first).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args(argv)
+    quick = not args.full
+    t0 = time.time()
+
+    from benchmarks import (fig5_end_to_end, fig6_load_sensitivity,
+                            fig7a_scalability, fig7b_decomposition,
+                            fig7c_threshold, overheads, roofline,
+                            table1_turnaround)
+
+    print("#" * 70)
+    print("# Tally-on-TPU benchmark suite (cached results reused; use")
+    print("#   --refresh on individual modules to recompute)")
+    print("#" * 70)
+
+    table1_turnaround.main()
+    fig5_end_to_end.main(["--quick"] if quick else [])
+    fig6_load_sensitivity.main(["--quick"] if quick else [])
+    fig6_load_sensitivity.main(["--timeseries"])
+    fig7a_scalability.main([])
+    fig7b_decomposition.main([])
+    fig7c_threshold.main(["--quick"] if quick else [])
+    overheads.main([])
+    try:
+        roofline.main([])
+    except Exception as e:                     # noqa: BLE001
+        print(f"[roofline] skipped: {e} (run repro.launch.dryrun --all)")
+
+    print(f"\ntotal: {time.time() - t0:.0f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

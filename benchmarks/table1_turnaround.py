@@ -1,0 +1,65 @@
+"""Table 1: turnaround latency by scheduling granularity.
+
+Whisper-train turnaround at iteration / kernel / block granularity from
+our calibrated trace, against BERT's inference latency — reproducing the
+paper's argument that ms-scale SLAs need (sub-)block-level scheduling.
+Thread-level scheduling has no TPU analogue (no warp-slot preemption);
+reported as n/a with the paper's value for reference (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from repro.core.device_model import A100
+from repro.core.simulator import task_time
+from repro.core.workloads import isolated_time, paper_workload
+from benchmarks.common import RESULTS, cached, fmt_table
+
+
+def compute() -> dict:
+    be = paper_workload("whisper-train", 1)
+    hp = paper_workload("bert-infer", 0)
+    kernels = be.iteration(0)
+    durs = np.array([k.duration(A100) for k in kernels])
+    waves = np.array([task_time(k, A100) for k in kernels])
+    # turnaround = expected residual of the in-flight unit when an HP
+    # kernel arrives (length-biased: arrival lands in unit i w.p. dur_i)
+    def residual(unit_durs, weights):
+        return float((weights * unit_durs).sum() / (2 * weights.sum()))
+    return {
+        "bert_inference_ms": isolated_time(hp, A100) * 1e3,
+        "iteration_ms": isolated_time(be, A100) * 1e3,
+        "kernel_ms": residual(durs, durs) * 1e3,
+        "kernel_max_ms": float(durs.max()) * 1e3,
+        "block_ms": residual(waves, durs) * 1e3,
+        "block_mean_ms": float(waves.mean()) * 1e3,
+        "thread_ms": None,
+        "paper": {"iteration_ms": 3000.0, "kernel_ms": 10.0,
+                  "block_ms": 0.304, "thread_ms": 0.038},
+    }
+
+
+def main(refresh: bool = False) -> dict:
+    out = cached(RESULTS / "table1.json", compute, refresh=refresh)
+    paper = out["paper"]
+    rows = [
+        {"granularity": "iteration", "ours_ms": out["iteration_ms"],
+         "paper_ms": paper["iteration_ms"]},
+        {"granularity": "kernel", "ours_ms": out["kernel_ms"],
+         "paper_ms": paper["kernel_ms"]},
+        {"granularity": "block", "ours_ms": out["block_ms"],
+         "paper_ms": paper["block_ms"]},
+        {"granularity": "thread (no TPU analogue)", "ours_ms": None,
+         "paper_ms": paper["thread_ms"]},
+    ]
+    print(f"\n== Table 1: Whisper-train turnaround vs BERT inference "
+          f"({out['bert_inference_ms']:.2f} ms) ==")
+    print(fmt_table(rows, ("granularity", "ours_ms", "paper_ms"),
+                    "{:.3f}"))
+    return out
+
+
+if __name__ == "__main__":
+    main(refresh=True)

@@ -1,0 +1,5 @@
+from repro.checkpoint.manager import (CheckpointManager, CheckpointConfig,
+                                      latest_step, restore, save)
+
+__all__ = ["CheckpointManager", "CheckpointConfig", "latest_step",
+           "restore", "save"]

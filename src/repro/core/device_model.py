@@ -1,0 +1,54 @@
+"""Analytical device models (timing substrate for the CPU-only container).
+
+This container cannot measure real co-execution wall-clock, so kernel
+durations come from a calibrated roofline-style model:
+
+    duration = max(flops / (peak_flops * eff), bytes / hbm_bw) + launch_oh
+    eff      = min(1, blocks / sm_count)        (occupancy of small kernels)
+
+Two devices: A100-SXM-40GB (the paper's testbed — used for paper-comparison
+numbers) and TPU v5e (the deployment target — used for roofline work).
+Transform overheads follow the paper's measurements: transformed kernels
+average ~25% body overhead (preemption control flow / slice launch
+amortization); every launch pays ``launch_overhead``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class DeviceModel:
+    name: str
+    peak_flops: float            # FLOP/s (bf16/fp16 dense)
+    hbm_bw: float                # bytes/s
+    launch_overhead: float       # s per kernel launch
+    sm_count: int                # parallel scheduling slots
+    preempt_body_overhead: float = 0.20   # PTB control-flow/sync tax
+    slice_body_overhead: float = 0.02     # per-slice body tax (cache reuse)
+
+    def kernel_time(self, flops: float, bytes_: float,
+                    blocks: int = 10 ** 9) -> float:
+        eff = min(1.0, blocks / self.sm_count) if blocks else 1.0
+        compute = flops / (self.peak_flops * max(eff, 1e-3))
+        memory = bytes_ / self.hbm_bw
+        return max(compute, memory) + self.launch_overhead
+
+
+A100 = DeviceModel(
+    name="A100-SXM4-40GB",
+    peak_flops=312e12,           # bf16 dense
+    hbm_bw=1555e9,
+    launch_overhead=4e-6,
+    sm_count=108,
+)
+
+TPU_V5E = DeviceModel(
+    name="TPU-v5e",
+    peak_flops=197e12,           # bf16
+    hbm_bw=819e9,
+    launch_overhead=3e-6,
+    sm_count=8,                  # schedulable tile streams per TensorCore
+)
+
+DEVICES = {d.name: d for d in (A100, TPU_V5E)}

@@ -1,0 +1,109 @@
+"""Evaluation metrics (paper §5.1): p99 latency, normalized & system throughput.
+
+System throughput = sum over concurrent workloads of (throughput under
+sharing / throughput in isolation) — the paper's normalized-sum definition,
+so a perfectly shared GPU scores ~2.0 for two saturating workloads and an
+idle-slack-filling pair scores between 1 and 2.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+def percentile(xs: Sequence[float], q: float) -> float:
+    if len(xs) == 0:
+        return float("nan")
+    return float(np.percentile(np.asarray(xs, dtype=np.float64), q))
+
+
+def p99(xs: Sequence[float]) -> float:
+    return percentile(xs, 99.0)
+
+
+@dataclass
+class LatencyStats:
+    """Request latency accounting for one inference workload."""
+
+    latencies: List[float] = field(default_factory=list)
+
+    def record(self, latency: float) -> None:
+        self.latencies.append(float(latency))
+
+    @property
+    def count(self) -> int:
+        return len(self.latencies)
+
+    def p50(self) -> float:
+        return percentile(self.latencies, 50.0)
+
+    def p99(self) -> float:
+        return percentile(self.latencies, 99.0)
+
+    def mean(self) -> float:
+        return float(np.mean(self.latencies)) if self.latencies else float("nan")
+
+    def overhead_vs(self, ideal_p99: float) -> float:
+        """Fractional p99 overhead vs isolated execution (paper's headline)."""
+        return self.p99() / ideal_p99 - 1.0
+
+
+@dataclass
+class ThroughputStats:
+    """Samples-processed accounting for one workload (train or infer)."""
+
+    samples: float = 0.0
+    span: float = 0.0           # wall-clock (sim) seconds observed
+
+    def record(self, n_samples: float) -> None:
+        self.samples += n_samples
+
+    def rate(self) -> float:
+        return self.samples / self.span if self.span > 0 else 0.0
+
+    def normalized(self, isolated_rate: float) -> float:
+        return self.rate() / isolated_rate if isolated_rate > 0 else 0.0
+
+
+def system_throughput(norm_throughputs: Sequence[float]) -> float:
+    return float(sum(norm_throughputs))
+
+
+@dataclass
+class RunResult:
+    """One co-execution run: per-workload latency/throughput + config echo."""
+
+    policy: str
+    hp_latency: LatencyStats
+    hp_throughput: ThroughputStats
+    be_throughputs: Dict[str, ThroughputStats]
+    hp_ideal_p99: float = float("nan")
+    hp_isolated_rate: float = float("nan")
+    be_isolated_rates: Dict[str, float] = field(default_factory=dict)
+    meta: Dict[str, float] = field(default_factory=dict)
+
+    def hp_overhead(self) -> float:
+        return self.hp_latency.overhead_vs(self.hp_ideal_p99)
+
+    def system_throughput(self) -> float:
+        parts = [self.hp_throughput.normalized(self.hp_isolated_rate)]
+        for name, ts in self.be_throughputs.items():
+            parts.append(ts.normalized(self.be_isolated_rates.get(name, 0.0)))
+        return system_throughput(parts)
+
+    def summary(self) -> Dict[str, float]:
+        out = {
+            "p99_ms": self.hp_latency.p99() * 1e3,
+            "ideal_p99_ms": self.hp_ideal_p99 * 1e3,
+            "p99_overhead_pct": 100.0 * self.hp_overhead(),
+            "system_throughput": self.system_throughput(),
+            "hp_norm_tput": self.hp_throughput.normalized(
+                self.hp_isolated_rate),
+        }
+        for name, ts in self.be_throughputs.items():
+            out[f"be_norm_tput/{name}"] = ts.normalized(
+                self.be_isolated_rates.get(name, 0.0))
+        out.update(self.meta)
+        return out

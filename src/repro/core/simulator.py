@@ -1,0 +1,697 @@
+"""Discrete-event co-execution simulator (timing substrate on CPU-only host).
+
+Prices kernel execution on an analytical ``DeviceModel`` and replays the
+paper's co-location experiments. The Tally policy is executed by the REAL
+scheduler (``core.scheduler.TallyScheduler``) driving a ``SimExecutor`` —
+the policy code is the product, only the clock is virtual.
+
+Execution/occupancy model
+    A kernel with B blocks on a device with C schedulable slots runs in
+    ``ceil(B/C)`` waves; one wave takes ``task_time = body_time / n_waves``.
+    Scheduling granularity determines how long an arriving high-priority
+    kernel waits for the device:
+
+      kernel granularity  : residual of the in-flight kernel   (TGS, no-sched)
+      wave granularity    : residual of the current wave        (MPS family)
+      block granularity   : one Tally slice / preemption drain  (Tally)
+
+Policies
+    tally          Fig. 4 scheduler + slicing/preemption transforms
+    tally_kernel   Fig. 4 scheduler, transforms disabled (Fig. 7b ablation)
+    tgs            kernel-level priority + adaptive BE rate control; BE may
+                   stay in flight during HP activity (rate-throttled)
+    no_sched       indiscriminate dispatch, single FIFO stream, kernel grain
+    mps            eager spatial sharing, wave-grain fair interleave
+    mps_priority   MPS + client priority: HP waves pre-empt queued BE waves
+                   (in-flight wave not interrupted)
+    time_slicing   temporal sharing: exclusive quanta round-robin
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.device_model import A100, DeviceModel
+from repro.core.metrics import LatencyStats, RunResult, ThroughputStats
+from repro.core.profiler import (DEFAULT, ExecSample, LaunchConfig,
+                                 TransparentProfiler)
+from repro.core.scheduler import (BEProgress, Client, PendingKernel,
+                                  TallyScheduler)
+from repro.core.traffic import TrafficTrace
+from repro.core.workloads import SimKernel, Workload, isolated_time
+
+POLICIES = ("tally", "tally_kernel", "tgs", "no_sched", "mps",
+            "mps_priority", "time_slicing")
+
+
+# ---------------------------------------------------------------------------
+# Launch pricing (shared by the sim executor and the transparent profiler)
+# ---------------------------------------------------------------------------
+
+
+def _body_time(k: SimKernel, dev: DeviceModel) -> float:
+    return max(k.duration(dev) - dev.launch_overhead, 1e-9)
+
+
+def n_waves(k: SimKernel, dev: DeviceModel) -> int:
+    return max(1, math.ceil(k.blocks / dev.sm_count))
+
+
+def task_time(k: SimKernel, dev: DeviceModel) -> float:
+    return _body_time(k, dev) / n_waves(k, dev)
+
+
+def price_launch(k: SimKernel, cfg: LaunchConfig, dev: DeviceModel,
+                 remaining: Optional[int] = None) -> Tuple[float, float]:
+    """(full completion time from `remaining` tasks, turnaround latency)."""
+    R = k.blocks if remaining is None else remaining
+    tt = task_time(k, dev)
+    C = dev.sm_count
+    if cfg.mode == "default":
+        t = math.ceil(R / C) * tt + dev.launch_overhead
+        return t, t                      # non-preemptible: turnaround = all
+    if cfg.mode == "slice":
+        s = max(1, math.ceil(k.blocks / cfg.param))      # blocks per slice
+        per = (math.ceil(s / C) * tt * (1 + dev.slice_body_overhead)
+               + dev.launch_overhead)
+        slices = math.ceil(R / s)
+        return slices * per, per
+    if cfg.mode == "preempt":
+        W = max(1, cfg.param)
+        P = min(W, C)
+        round_t = tt * (W / P) * (1 + dev.preempt_body_overhead)
+        rounds = math.ceil(R / W)
+        t = rounds * round_t + dev.launch_overhead
+        return t, round_t                # Eq. 1: latency*W/total == round_t
+    raise ValueError(cfg.mode)
+
+
+def make_measure(dev: DeviceModel) -> Callable[[SimKernel, LaunchConfig],
+                                               ExecSample]:
+    def measure(kernel: SimKernel, cfg: LaunchConfig) -> ExecSample:
+        t, ta = price_launch(kernel, cfg, dev)
+        return ExecSample(exec_time=t, turnaround=ta)
+    return measure
+
+
+# ---------------------------------------------------------------------------
+# Request/iteration bookkeeping shared by every engine
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class _Request:
+    rid: int
+    arrival: float
+    done: bool = False
+
+
+class Bookkeeper:
+    def __init__(self, duration: float):
+        self.duration = duration
+        self.latency = LatencyStats()
+        self.hp_tput = ThroughputStats(span=duration)
+        self.be_tput: Dict[str, ThroughputStats] = {}
+        self.requests: Dict[int, _Request] = {}
+        self.meta: Dict[str, float] = {}
+
+    def arrival(self, rid: int, t: float) -> None:
+        self.requests[rid] = _Request(rid, t)
+
+    def request_done(self, rid: int, t: float, samples: float) -> None:
+        r = self.requests[rid]
+        if not r.done:
+            r.done = True
+            self.latency.record(t - r.arrival)
+            self.hp_tput.record(samples)
+
+    def iteration_done(self, client_name: str, samples: float) -> None:
+        self.be_tput.setdefault(
+            client_name, ThroughputStats(span=self.duration)).record(samples)
+
+
+def _expand_requests(hp: Workload, trace: TrafficTrace, duration: float
+                     ) -> List[Tuple[float, int, List[SimKernel]]]:
+    out = []
+    for rid, t in enumerate(trace.arrivals):
+        if t >= duration:
+            break
+        out.append((float(t), rid, hp.iteration(rid)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Priority engines (tally / tally_kernel / tgs) — event-driven device
+# ---------------------------------------------------------------------------
+
+ARRIVAL, COMPLETE, TIMER = 0, 1, 2
+
+
+@dataclass
+class _Inflight:
+    launch_id: int
+    kind: str                   # "hp" | "be"
+    client: Client
+    pk: Optional[PendingKernel] = None
+    prog: Optional[BEProgress] = None
+    cfg: Optional[LaunchConfig] = None
+    start: float = 0.0
+    end: float = 0.0
+    # preemption support
+    round_t: float = 0.0        # drain granularity (preempt mode)
+    tasks_per_round: int = 0
+    preempted: bool = False
+
+
+class SimExecutor:
+    """Executor protocol over a virtual clock (drives TallyScheduler)."""
+
+    def __init__(self, dev: DeviceModel, hp_client: Optional[Client],
+                 requests, book: Bookkeeper, duration: float,
+                 samples_per_request: float):
+        self.dev = dev
+        self.clock = 0.0
+        self.duration = duration
+        self.book = book
+        self.hp_client = hp_client
+        self.samples_per_request = samples_per_request
+        self.events: List[Tuple[float, int, int, Any]] = []
+        self._seq = itertools.count()
+        self._launch_ids = itertools.count()
+        self.inflight: Optional[_Inflight] = None
+        self.scheduler: Optional[TallyScheduler] = None   # wired post-init
+        self.be_busy_time = 0.0
+        self.hp_busy_time = 0.0
+        for t, rid, kernels in requests:
+            self._push(t, ARRIVAL, (rid, kernels))
+
+    # -- event plumbing -------------------------------------------------------
+
+    def _push(self, t: float, kind: int, payload: Any) -> None:
+        heapq.heappush(self.events, (t, next(self._seq), kind, payload))
+
+    def now(self) -> float:
+        return self.clock
+
+    def device_busy(self) -> bool:
+        return self.inflight is not None
+
+    # -- launches --------------------------------------------------------------
+
+    def launch_hp(self, client: Client, pk: PendingKernel) -> None:
+        lid = next(self._launch_ids)
+        dur = pk.kernel.duration(self.dev)
+        inf = _Inflight(lid, "hp", client, pk=pk, start=self.clock,
+                        end=self.clock + dur)
+        self.inflight = inf
+        self.hp_busy_time += dur
+        self._push(inf.end, COMPLETE, lid)
+
+    def launch_be(self, client: Client, prog: BEProgress,
+                  cfg: LaunchConfig) -> None:
+        lid = next(self._launch_ids)
+        k = prog.pending.kernel
+        if cfg.mode == "slice":
+            s = max(1, math.ceil(k.blocks / cfg.param))
+            chunk = min(s, prog.remaining)
+            t, _ = price_launch(k, DEFAULT, self.dev, remaining=chunk)
+            t = (t - self.dev.launch_overhead) * (
+                1 + self.dev.slice_body_overhead) + self.dev.launch_overhead
+            inf = _Inflight(lid, "be", client, prog=prog, cfg=cfg,
+                            start=self.clock, end=self.clock + t,
+                            tasks_per_round=chunk, round_t=t)
+        elif cfg.mode == "preempt":
+            t, round_t = price_launch(k, cfg, self.dev,
+                                      remaining=prog.remaining)
+            inf = _Inflight(lid, "be", client, prog=prog, cfg=cfg,
+                            start=self.clock, end=self.clock + t,
+                            tasks_per_round=cfg.param, round_t=round_t)
+        else:                                   # default: whole remainder
+            t, _ = price_launch(k, DEFAULT, self.dev,
+                                remaining=prog.remaining)
+            inf = _Inflight(lid, "be", client, prog=prog, cfg=cfg,
+                            start=self.clock, end=self.clock + t,
+                            tasks_per_round=prog.remaining, round_t=t)
+        self.inflight = inf
+        self._push(inf.end, COMPLETE, lid)
+
+    def preempt_best_effort(self) -> None:
+        inf = self.inflight
+        if inf is None or inf.kind != "be" or inf.preempted:
+            return
+        if inf.cfg is not None and inf.cfg.mode == "preempt":
+            # workers drain their current round, then stop (flag semantics)
+            elapsed = self.clock - inf.start - self.dev.launch_overhead
+            rounds_done = max(0, math.floor(elapsed / inf.round_t))
+            drain_end = (inf.start + self.dev.launch_overhead
+                         + (rounds_done + 1) * inf.round_t)
+            drain_end = min(drain_end, inf.end)
+            if drain_end < inf.end:
+                inf.end = drain_end
+                inf.preempted = True
+                lid = next(self._launch_ids)    # supersede completion event
+                inf.launch_id = lid
+                self._push(inf.end, COMPLETE, lid)
+        # slice/default launches are short/terminal: let them run out
+
+    # -- event loop --------------------------------------------------------------
+
+    def wait(self) -> bool:
+        while self.events:
+            t, _, kind, payload = heapq.heappop(self.events)
+            if t > self.duration and kind == ARRIVAL:
+                continue
+            self.clock = max(self.clock, t)
+            if kind == ARRIVAL:
+                rid, kernels = payload
+                self.book.arrival(rid, t)
+                hp = self.hp_client
+                assert hp is not None
+                for i, k in enumerate(kernels):
+                    hp.queue.append(PendingKernel(
+                        k, request_id=rid,
+                        last_of_request=(i == len(kernels) - 1)))
+                return True
+            if kind == COMPLETE:
+                inf = self.inflight
+                if inf is None or inf.launch_id != payload:
+                    continue                      # stale (superseded) event
+                self.inflight = None
+                if inf.kind == "hp":
+                    assert inf.pk is not None
+                    self.scheduler.on_hp_complete(inf.client)
+                    if inf.pk.last_of_request:
+                        self.book.request_done(inf.pk.request_id, self.clock,
+                                               self.samples_per_request)
+                else:
+                    assert inf.prog is not None
+                    self.be_busy_time += self.clock - inf.start
+                    if inf.preempted:
+                        elapsed = (inf.end - inf.start
+                                   - self.dev.launch_overhead)
+                        rounds = max(1, round(elapsed / inf.round_t))
+                        done = min(inf.prog.remaining,
+                                   rounds * inf.tasks_per_round)
+                    else:
+                        done = min(inf.prog.remaining, inf.tasks_per_round
+                                   if inf.cfg and inf.cfg.mode == "slice"
+                                   else inf.prog.remaining)
+                    wm = inf.prog.watermark + done
+                    self.scheduler.on_be_complete(inf.client, inf.prog, wm)
+                    if inf.client.current is None:       # kernel finished
+                        wl = inf.client.workload
+                        self.book.iteration_done(inf.client.name,
+                                                 wl.samples_per_kernel)
+                        if wl.host_gap > 0:              # input-stall gap
+                            inf.client.not_ready_until = (self.clock
+                                                          + wl.host_gap)
+                            self._push(inf.client.not_ready_until,
+                                       TIMER, None)
+                return True
+            if kind == TIMER:
+                return True
+        return False
+
+
+def _run_priority(policy: str, hp: Optional[Workload], bes: List[Workload],
+                  trace: Optional[TrafficTrace], dev: DeviceModel,
+                  duration: float, threshold: float) -> Bookkeeper:
+    book = Bookkeeper(duration)
+    hp_client = Client(hp) if hp is not None else None
+    be_clients = [Client(w) for w in bes]
+    requests = (_expand_requests(hp, trace, duration)
+                if hp is not None and trace is not None else [])
+    ex = SimExecutor(dev, hp_client, requests, book, duration,
+                     samples_per_request=(hp.samples_per_iteration
+                                          if hp else 1.0))
+    profiler = TransparentProfiler(make_measure(dev), dev.sm_count,
+                                   turnaround_bound=threshold)
+    clients = ([hp_client] if hp_client else []) + be_clients
+    sched = TallyScheduler(clients, profiler, ex,
+                           transforms_enabled=(policy == "tally"))
+    ex.scheduler = sched
+    sched.run(duration)
+    book.meta = {"profiled_kernels": profiler.profiled_kernels,
+                 "profile_time_s": profiler.profile_time}
+    return book
+
+
+# ---------------------------------------------------------------------------
+# Concurrent spatial engine (no_sched / mps / mps_priority)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class _Stream:
+    """One client's in-order kernel stream at the device."""
+
+    client: Client
+    is_hp: bool
+    pk: Optional[PendingKernel] = None
+    rem: float = 0.0                 # remaining work (full-speed seconds)
+    demand: int = 0                  # SM slots requested: min(blocks, C)
+    block_dur: float = 0.0           # per-block residency time
+    ready_at: float = 0.0            # entry gate (slot acquisition / gaps)
+    entered: bool = False
+
+
+def _admit(book: Bookkeeper, hp_client: Client, requests, arr_i: int,
+           now: float) -> int:
+    while arr_i < len(requests) and requests[arr_i][0] <= now:
+        t, rid, kernels = requests[arr_i]
+        book.arrival(rid, t)
+        for i, k in enumerate(kernels):
+            hp_client.queue.append(PendingKernel(
+                k, request_id=rid, last_of_request=(i == len(kernels) - 1)))
+        arr_i += 1
+    return arr_i
+
+
+def _load(st: _Stream, dev: DeviceModel) -> bool:
+    pk = st.client.fetch_next_kernel()
+    if pk is None:
+        return False
+    st.pk = pk
+    st.rem = pk.kernel.duration(dev)
+    st.demand = min(pk.kernel.blocks, dev.sm_count)
+    st.block_dur = task_time(pk.kernel, dev)
+    st.entered = False
+    return True
+
+
+def _finish_kernel(st: _Stream, book: Bookkeeper, clock: float,
+                   dev: DeviceModel) -> None:
+    pk = st.pk
+    st.pk = None
+    st.entered = False
+    wl = st.client.workload
+    if st.is_hp:
+        st.client.kernel_running = False
+        if pk.last_of_request:
+            book.request_done(pk.request_id, clock, wl.samples_per_iteration)
+    else:
+        book.iteration_done(st.client.name, wl.samples_per_kernel)
+        if wl.host_gap > 0:
+            st.client.not_ready_until = clock + wl.host_gap
+
+
+def _run_concurrent(policy: str, hp: Optional[Workload],
+                    bes: List[Workload], trace: Optional[TrafficTrace],
+                    dev: DeviceModel, duration: float) -> Bookkeeper:
+    """Fluid spatial-sharing model (MPS family; no_sched = same-context
+    multi-stream eager dispatch, behaviourally MPS-like).
+
+    Kernels from all clients run CONCURRENTLY. A kernel needs
+    ``min(blocks, C)`` SM slots; when total demand exceeds C every running
+    kernel slows to ``C / total_demand`` (fair) — or, with MPS priority,
+    HP kernels take their demand first and BE gets the leftover.
+
+    Slot acquisition is not instant: resident blocks of co-running kernels
+    release slots only at block boundaries, so a newly launched kernel
+    waits ~half the blocker's per-block residency before entering
+    (`mps_priority` halves that again: queued HP blocks jump the dispatch
+    queue). This is the kernel-granularity interference Tally eliminates.
+    """
+    priority = policy == "mps_priority"
+    book = Bookkeeper(duration)
+    streams: List[_Stream] = []
+    hp_client = Client(hp) if hp is not None else None
+    if hp_client is not None:
+        streams.append(_Stream(hp_client, True))
+    for w in bes:
+        streams.append(_Stream(Client(w), False))
+    requests = (_expand_requests(hp, trace, duration)
+                if hp is not None and trace is not None else [])
+    arr_i = 0
+    clock = 0.0
+    hp_hold_until = -1.0          # HP slot retention window (priority mode)
+
+    def entry_delay(st: _Stream) -> float:
+        others = [s for s in streams
+                  if s is not st and s.entered and s.pk is not None]
+        if not others:
+            return 0.0
+        free = dev.sm_count - sum(s.demand for s in others)
+        if free >= st.demand:
+            return 0.0
+        # resident blocks of the blocker retire staggered (one every
+        # block_dur / C on average); entering needs `demand` retirements
+        blocker = max(o.block_dur for o in others)
+        need = st.demand - max(free, 0)
+        wait = need * blocker / dev.sm_count
+        if st.is_hp and priority:
+            return 0.5 * wait                 # queued HP blocks dispatch first
+        return wait
+
+    while clock < duration:
+        arr_i = _admit(book, hp_client, requests, arr_i, clock) \
+            if hp_client is not None else arr_i
+        # load + gate streams
+        for st in streams:
+            if st.pk is None and clock >= st.client.not_ready_until:
+                if _load(st, dev):
+                    st.ready_at = clock + entry_delay(st)
+            if st.pk is not None and not st.entered \
+                    and clock >= st.ready_at:
+                st.entered = True
+        running = [s for s in streams if s.entered and s.pk is not None]
+        # rates
+        rates: Dict[int, float] = {}
+        total_d = sum(s.demand for s in running)
+        if priority:
+            hp_d = sum(s.demand for s in running if s.is_hp)
+            be_d = total_d - hp_d
+            leftover = max(dev.sm_count - hp_d, 0)
+            for i, s in enumerate(streams):
+                if s not in running:
+                    continue
+                if s.is_hp:
+                    rates[i] = min(1.0, dev.sm_count / max(hp_d, 1))
+                else:
+                    # resident BE blocks drain but no new waves while HP
+                    # saturates; floor models the draining wave
+                    rates[i] = max(0.05, min(1.0, leftover / max(be_d, 1)))
+        else:
+            scale = min(1.0, dev.sm_count / max(total_d, 1))
+            for i, s in enumerate(streams):
+                if s in running:
+                    rates[i] = scale
+        # next event horizon
+        horizon = [duration]
+        if arr_i < len(requests):
+            horizon.append(requests[arr_i][0])
+        for i, s in enumerate(streams):
+            if s in running:
+                horizon.append(clock + s.rem / max(rates[i], 1e-9))
+            elif s.pk is not None and not s.entered:
+                horizon.append(s.ready_at)
+            elif s.pk is None and s.client.not_ready_until > clock:
+                horizon.append(s.client.not_ready_until)
+        t_next = max(min(horizon), clock + 1e-9)
+        dt = t_next - clock
+        for i, s in enumerate(streams):
+            if s in running:
+                s.rem -= rates[i] * dt
+        clock = t_next
+        for s in streams:
+            if s.pk is not None and s.entered and s.rem <= 1e-12:
+                if s.is_hp and priority:
+                    hp_hold_until = clock + 1e-3     # burst retention
+                _finish_kernel(s, book, clock, dev)
+    return book
+
+
+# ---------------------------------------------------------------------------
+# TGS engine — kernel-granularity priority + adaptive rate control
+# ---------------------------------------------------------------------------
+
+
+def _run_tgs(hp: Optional[Workload], bes: List[Workload],
+             trace: Optional[TrafficTrace], dev: DeviceModel,
+             duration: float) -> Bookkeeper:
+    """TGS (NSDI'23): transparent kernel-level scheduling with adaptive
+    rate control. TGS sits at the container level: it throttles the BE
+    container's LAUNCH RATE from observed HP throughput feedback, but it
+    has no request-boundary knowledge — a rate-gated BE kernel slips in
+    between any two HP kernel launches, and once running is never
+    interrupted (kernel-granularity turnaround, paper Table 1 ~10ms).
+    Modeled as kernel-grain interleave: one HP kernel, then (if its gate
+    opened) one BE kernel, repeating."""
+    book = Bookkeeper(duration)
+    hp_client = Client(hp) if hp is not None else None
+    be_clients = [Client(w) for w in bes]
+    requests = (_expand_requests(hp, trace, duration)
+                if hp is not None and trace is not None else [])
+    arr_i = 0
+    clock = 0.0
+    gate = [0.0] * len(be_clients)        # per-BE next allowed launch
+    duty = [0.25] * len(be_clients)       # adaptive BE duty cycle
+    hp_busy = 0.0
+
+    def run_be(i: int, c: Client) -> bool:
+        nonlocal clock
+        if clock < max(gate[i], c.not_ready_until):
+            return False
+        bpk = c.fetch_next_kernel()
+        if bpk is None:
+            return False
+        dur = bpk.kernel.duration(dev)
+        clock += dur                     # runs to completion (no preempt)
+        book.iteration_done(c.name, c.workload.samples_per_kernel)
+        if c.workload.host_gap > 0:
+            c.not_ready_until = clock + c.workload.host_gap
+        # adaptive rate control (TGS feedback loop): back off hard when
+        # the production job shows pressure, creep back up when clear
+        if hp_client is not None and hp_client.queue:
+            duty[i] = max(duty[i] * 0.5, 0.02)
+        else:
+            duty[i] = min(duty[i] * 1.05, 0.75)
+        gate[i] = clock + dur * (1.0 - duty[i]) / duty[i]
+        return True
+
+    rr = 0
+    while clock < duration:
+        if hp_client is not None:
+            arr_i = _admit(book, hp_client, requests, arr_i, clock)
+        progressed = False
+        if hp_client is not None and hp_client.queue:
+            pk = hp_client.queue.popleft()
+            dur = pk.kernel.duration(dev)
+            clock += dur
+            hp_busy += dur
+            if pk.last_of_request:
+                book.request_done(pk.request_id, clock,
+                                  hp_client.workload.samples_per_iteration)
+            progressed = True
+        # rate-gated BE kernel may interleave regardless of HP queue state
+        for k in range(len(be_clients)):
+            i = (rr + k) % len(be_clients)
+            if run_be(i, be_clients[i]):
+                rr = i + 1
+                progressed = True
+                break
+        if not progressed:
+            nxt = [duration]
+            if arr_i < len(requests):
+                nxt.append(requests[arr_i][0])
+            nxt.extend(max(g, c.not_ready_until)
+                       for g, c in zip(gate, be_clients))
+            t = min(x for x in nxt if x > clock) if any(
+                x > clock for x in nxt) else duration
+            clock = max(clock + 1e-9, t)
+    return book
+
+
+# ---------------------------------------------------------------------------
+# Time-slicing engine
+# ---------------------------------------------------------------------------
+
+
+def _run_timeslice(hp: Optional[Workload], bes: List[Workload],
+                   trace: Optional[TrafficTrace], dev: DeviceModel,
+                   duration: float, quantum: float = 10e-3,
+                   switch_cost: float = 100e-6) -> Bookkeeper:
+    """NVIDIA time-slicing: exclusive context quanta, round-robin among
+    clients; a context yields early when it runs out of work; compute
+    preemption is instruction-level so a quantum can end mid-kernel."""
+    book = Bookkeeper(duration)
+    streams: List[_Stream] = []
+    hp_client = Client(hp) if hp is not None else None
+    if hp_client is not None:
+        streams.append(_Stream(hp_client, True))
+    for w in bes:
+        streams.append(_Stream(Client(w), False))
+    requests = (_expand_requests(hp, trace, duration)
+                if hp is not None and trace is not None else [])
+    arr_i = 0
+    clock = 0.0
+    turn = 0
+
+    def has_work(st: _Stream, now: float) -> bool:
+        if st.pk is not None:
+            return True
+        if now < st.client.not_ready_until:
+            return False
+        return bool(st.client.queue) or st.client.workload.kind == "train"
+
+    while clock < duration:
+        if hp_client is not None:
+            arr_i = _admit(book, hp_client, requests, arr_i, clock)
+        workers = [i for i, s in enumerate(streams) if has_work(s, clock)]
+        if not workers:
+            nxt = [duration]
+            if arr_i < len(requests):
+                nxt.append(requests[arr_i][0])
+            nxt.extend(s.client.not_ready_until for s in streams
+                       if s.client.not_ready_until > clock)
+            clock = max(clock + 1e-9, min(nxt))
+            continue
+        idx = workers[turn % len(workers)]
+        turn += 1
+        st = streams[idx]
+        if len(workers) > 1:
+            clock += switch_cost
+        t_end = clock + quantum
+        while clock < t_end and clock < duration:
+            if hp_client is not None:
+                arr_i = _admit(book, hp_client, requests, arr_i, clock)
+            if st.pk is None:
+                if clock < st.client.not_ready_until:
+                    break                     # yield on host stall
+                pk = st.client.fetch_next_kernel()
+                if pk is None:
+                    break                     # yield on idle
+                st.pk = pk
+                st.rem = pk.kernel.duration(dev)
+            run = min(st.rem, t_end - clock)
+            clock += run
+            st.rem -= run
+            if st.rem <= 1e-12:
+                _finish_kernel(st, book, clock, dev)
+    return book
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+
+def simulate(policy: str, hp: Optional[Workload], bes: List[Workload],
+             trace: Optional[TrafficTrace], dev: DeviceModel = A100,
+             duration: float = 60.0,
+             threshold: float = 0.0316e-3) -> Bookkeeper:
+    if policy in ("tally", "tally_kernel"):
+        return _run_priority(policy, hp, bes, trace, dev, duration, threshold)
+    if policy in ("no_sched", "mps", "mps_priority"):
+        return _run_concurrent(policy, hp, bes, trace, dev, duration)
+    if policy == "tgs":
+        return _run_tgs(hp, bes, trace, dev, duration)
+    if policy == "time_slicing":
+        return _run_timeslice(hp, bes, trace, dev, duration)
+    raise ValueError(f"unknown policy {policy!r}; known: {POLICIES}")
+
+
+def run_policy(policy: str, hp: Workload, bes: List[Workload],
+               trace: TrafficTrace, dev: DeviceModel = A100,
+               duration: float = 60.0, threshold: float = 0.0316e-3
+               ) -> RunResult:
+    """Co-execution run + isolated references -> RunResult."""
+    book = simulate(policy, hp, bes, trace, dev, duration, threshold)
+    iso = simulate("tally", hp, [], trace, dev, duration, threshold)
+    be_iso = {w.name: w.samples_per_iteration /
+              (w.iteration_time or isolated_time(w, dev)) for w in bes}
+    return RunResult(
+        policy=policy,
+        hp_latency=book.latency,
+        hp_throughput=book.hp_tput,
+        be_throughputs=book.be_tput,
+        hp_ideal_p99=iso.latency.p99(),
+        hp_isolated_rate=iso.hp_tput.rate(),
+        be_isolated_rates=be_iso,
+        meta=book.meta,
+    )

@@ -1,0 +1,271 @@
+"""Workload kernel traces for the co-execution engine.
+
+A workload is a stream of *iterations* (training) or *requests* (inference),
+each a list of ``SimKernel``s. Two sources:
+
+1. **Paper benchmark suite** (Table 2) — the 6 training + 6 inference
+   workloads, synthesized from calibrated kernel-duration distributions.
+   Calibration anchors (all from the paper):
+     - per-workload iteration time / request latency (Table 2),
+     - ResNet50: 99.3% of kernels < 0.1 ms (§5.5),
+     - Whisper: 5.6% of kernels > 3.93 ms; kernel-level turnaround ~10 ms,
+       block-level ~304 µs, iteration ~3 s (Table 1),
+     - A100 occupancy: long kernels run tens of SM waves.
+
+2. **Our architectures** — kernel lists derived analytically from the
+   ModelConfig (matmul/attention/scan shapes), so Tally experiments can run
+   over the assigned archs too (``arch_training_workload``).
+
+Durations are *device-model* durations: `SimKernel` carries (flops, bytes,
+blocks) and the engine prices it on a ``DeviceModel`` — so the same trace
+replays on A100 (paper comparison) or TPU v5e (deployment target).
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.device_model import A100, DeviceModel
+
+
+@dataclass(frozen=True)
+class SimKernel:
+    """One schedulable kernel launch (the simulator's KernelDescriptor)."""
+
+    name: str
+    flops: float
+    bytes: float
+    blocks: int                  # schedulable tasks (parallel grid cells)
+    sliceable: bool = True       # False => cooperative-kernel fallback (§6)
+
+    def duration(self, dev: DeviceModel) -> float:
+        return dev.kernel_time(self.flops, self.bytes, self.blocks)
+
+
+@dataclass
+class Workload:
+    """A client of the Tally server."""
+
+    name: str
+    kind: str                            # "train" | "infer"
+    priority: int                        # 0 = high, 1+ = best-effort
+    iteration: Callable[[int], List[SimKernel]]   # idx -> kernels
+    samples_per_iteration: float = 1.0
+    n_kernels: int = 1                   # kernels per iteration/request
+    host_gap: float = 0.0                # host-side gap after each kernel
+    iteration_time: float = 0.0          # isolated wall time per iteration
+
+    @property
+    def is_high_priority(self) -> bool:
+        return self.priority == 0
+
+    @property
+    def samples_per_kernel(self) -> float:
+        """Fractional throughput credit per completed kernel."""
+        return self.samples_per_iteration / max(self.n_kernels, 1)
+
+
+# ---------------------------------------------------------------------------
+# Calibrated synthesis of the paper's Table-2 suite
+# ---------------------------------------------------------------------------
+
+
+def _mk_kernels(rng: np.random.Generator, total_time: float, n_kernels: int,
+                frac_long: float, long_ratio: float, dev: DeviceModel,
+                prefix: str) -> List[SimKernel]:
+    """Build ``n_kernels`` kernels summing to ``total_time`` on ``dev``.
+
+    ``frac_long`` of kernels are 'long' with duration ~ ``long_ratio`` x the
+    short mode (lognormal jitter on both). Kernels are calibrated at the
+    device's ridge point (flops = dur*peak, bytes = dur*bw) so the priced
+    duration equals the target on the calibration device.
+    """
+    n_long = int(round(frac_long * n_kernels))
+    n_short = n_kernels - n_long
+    w_short = np.exp(rng.normal(0.0, 0.45, size=n_short))
+    w_long = np.exp(rng.normal(0.0, 0.30, size=n_long)) * long_ratio
+    w = np.concatenate([w_short, w_long])
+    rng.shuffle(w)
+    # renormalize so durations (incl. launch overhead) sum to total_time
+    body_total = total_time - n_kernels * dev.launch_overhead
+    body_total = max(body_total, 0.1 * total_time)
+    w *= body_total / w.sum()
+    kernels = []
+    for i, dur in enumerate(w):
+        # block calibration: long kernels retire SM waves every ~304us
+        # (paper Table 1: Whisper block-level turnaround); a block therefore
+        # occupies its SM slot for dur/n_waves <= ~304us. Short kernels get
+        # proportionally fewer blocks than SMs (partial occupancy).
+        blocks = max(1, int(round(dur / 304e-6 * dev.sm_count)))
+        # calibrate so the device-model duration (incl. its occupancy
+        # derating for blocks < #SM) equals the target `dur`
+        eff = min(1.0, blocks / dev.sm_count)
+        flops = dur * dev.peak_flops * eff
+        bytes_ = dur * dev.hbm_bw
+        kernels.append(SimKernel(f"{prefix}/k{i}", float(flops),
+                                 float(bytes_), int(blocks)))
+    return kernels
+
+
+@dataclass(frozen=True)
+class _Suite:
+    iter_time: float          # isolated wall time per iteration/request
+    n_kernels: int
+    frac_long: float
+    long_ratio: float
+    batch: float = 1.0
+    busy_frac: float = 1.0    # fraction of iter_time the GPU is busy
+                              # (training is often input/CPU-bound — the
+                              # very underutilization GPU sharing exploits)
+
+
+# Training workloads: Table 2 throughputs (it/s) -> iteration times.
+# busy_frac calibrated so kernel-duration stats match the paper §5.5:
+# ResNet50 99.3% of kernels < 0.1ms; Whisper 5.6% of kernels > 3.93ms.
+_TRAIN_SUITE: Dict[str, _Suite] = {
+    # name:            1/it_s   #kern frac_long ratio batch  busy
+    "resnet50-train":  _Suite(1.00, 900, 0.007, 20.0, 64, 0.04),
+    "pointnet-train":  _Suite(0.025, 120, 0.00, 1.0, 32, 0.30),
+    "bert-train":      _Suite(0.556, 480, 0.04, 20.0, 8, 0.45),
+    "gpt2-train":      _Suite(0.303, 600, 0.01, 6.0, 4, 0.80),
+    "pegasus-train":   _Suite(0.345, 700, 0.02, 10.0, 4, 0.80),
+    "whisper-train":   _Suite(3.333, 800, 0.056, 50.0, 16, 0.90),
+}
+
+# Inference workloads: Table 2 latencies (pure GPU latency, busy=1).
+_INFER_SUITE: Dict[str, _Suite] = {
+    "resnet50-infer":  _Suite(1.37e-3, 80, 0.0, 1.0, 1),
+    "bert-infer":      _Suite(3.93e-3, 120, 0.0, 1.0, 1),
+    "yolov6m-infer":   _Suite(17.5e-3, 220, 0.01, 4.0, 1),
+    "llama2-7b-infer": _Suite(1.9, 4000, 0.002, 5.0, 1),
+    "stable-diffusion-infer": _Suite(2.5, 5000, 0.004, 4.0, 1),
+    "gpt-neo-infer":   _Suite(3.6, 5200, 0.002, 5.0, 1),
+}
+
+TRAIN_NAMES = tuple(_TRAIN_SUITE)
+INFER_NAMES = tuple(_INFER_SUITE)
+
+
+def paper_workload(name: str, priority: int, dev: DeviceModel = A100,
+                   seed: int = 0) -> Workload:
+    """One of the paper's Table-2 workloads as a Workload."""
+    if name in _TRAIN_SUITE:
+        suite, kind = _TRAIN_SUITE[name], "train"
+    elif name in _INFER_SUITE:
+        suite, kind = _INFER_SUITE[name], "infer"
+    else:
+        raise KeyError(f"unknown workload {name!r}; known: "
+                       f"{TRAIN_NAMES + INFER_NAMES}")
+    stable = zlib.crc32(name.encode()) & 0xFFFF      # hash() is salted
+    busy_time = suite.iter_time * suite.busy_frac
+    base = _mk_kernels(np.random.default_rng(seed ^ stable),
+                       busy_time, suite.n_kernels, suite.frac_long,
+                       suite.long_ratio, dev, name)
+
+    def iteration(idx: int) -> List[SimKernel]:
+        return base     # DL iterations repeat the same kernel sequence
+
+    gap = (suite.iter_time * (1.0 - suite.busy_frac) / suite.n_kernels
+           if kind == "train" else 0.0)
+    return Workload(name=name, kind=kind, priority=priority,
+                    iteration=iteration,
+                    samples_per_iteration=suite.batch,
+                    n_kernels=suite.n_kernels,
+                    host_gap=gap,
+                    iteration_time=suite.iter_time)
+
+
+def isolated_time(w: Workload, dev: DeviceModel) -> float:
+    """Isolated wall time of one iteration/request (the 'ideal')."""
+    busy = sum(k.duration(dev) for k in w.iteration(0))
+    return busy + w.host_gap * w.n_kernels
+
+
+# ---------------------------------------------------------------------------
+# Kernel traces for the assigned architectures (analytic, from ModelConfig)
+# ---------------------------------------------------------------------------
+
+
+def arch_kernels(cfg, batch: int, seq: int, *, step: str = "train",
+                 prefix: Optional[str] = None) -> List[SimKernel]:
+    """Analytic per-layer kernel list for one step of an assigned arch.
+
+    Decomposition: per layer QKV/O projections + attention (or SSD scan) +
+    FFN (or routed-expert) matmuls + embedding/lm_head; train = fwd + 2x bwd.
+    Block counts follow 128x128 output tiling (the MXU-aligned tile).
+    """
+    p = prefix or cfg.name
+    mult = 3.0 if step == "train" else 1.0    # bwd ~ 2x fwd flops
+    d, h = cfg.d_model, cfg.head_dim_
+    T = batch * seq
+    ks: List[SimKernel] = []
+
+    def mm(name, m, k, n, count=1):
+        flops = 2.0 * m * k * n * mult * count
+        bytes_ = 2.0 * (m * k + k * n + m * n) * mult * count
+        blocks = max(1, (m // 128) * max(1, n // 128))
+        ks.append(SimKernel(f"{p}/{name}", flops, bytes_, blocks))
+
+    n_attn = sum(cfg.is_attention_layer(i) for i in range(cfg.num_layers))
+    n_ssm = cfg.num_layers - n_attn
+    if n_attn:
+        mm("qkv", T, d, (cfg.num_heads + 2 * cfg.num_kv_heads) * h,
+           count=n_attn)
+        # flash attention: causal ~ 1/2 of full S^2
+        fl = 2.0 * 2.0 * batch * cfg.num_heads * seq * seq * h * 0.5 * mult
+        ks.append(SimKernel(
+            f"{p}/flash_attn", fl,
+            2.0 * batch * cfg.num_heads * seq * h * 4 * mult,
+            max(1, batch * cfg.num_heads * (seq // 128)),
+        ))
+        mm("attn_out", T, cfg.num_heads * h, d, count=n_attn)
+    if n_ssm and cfg.ssm is not None:
+        d_in = cfg.ssm.expand * d
+        nh = cfg.ssm.num_heads(d)
+        mm("ssm_proj", T, d, 2 * d_in + 2 * cfg.ssm.d_state + nh, count=n_ssm)
+        scan_fl = (2.0 * T * nh * cfg.ssm.head_dim * cfg.ssm.d_state * 4
+                   * mult * n_ssm)
+        ks.append(SimKernel(f"{p}/ssd_scan", scan_fl, scan_fl / 60.0,
+                            max(1, batch * nh)))
+        mm("ssm_out", T, d_in, d, count=n_ssm)
+    n_moe = sum(cfg.is_moe_layer(i) for i in range(cfg.num_layers))
+    n_dense = (0 if cfg.family == "ssm"
+               else cfg.num_layers - n_moe)
+    if n_dense:
+        mm("mlp_in", T, d, 2 * cfg.d_ff, count=n_dense)
+        mm("mlp_out", T, cfg.d_ff, d, count=n_dense)
+    if n_moe and cfg.moe is not None:
+        e = cfg.moe
+        mm("moe_in", T * e.experts_per_token, d, 2 * e.d_ff, count=n_moe)
+        mm("moe_out", T * e.experts_per_token, e.d_ff, d, count=n_moe)
+        if e.dense_residual_d_ff:
+            mm("moe_dense_in", T, d, 2 * e.dense_residual_d_ff, count=n_moe)
+            mm("moe_dense_out", T, e.dense_residual_d_ff, d, count=n_moe)
+    mm("lm_head", T, d, cfg.vocab_size)
+    return ks
+
+
+def arch_training_workload(cfg, batch: int, seq: int, priority: int = 1
+                           ) -> Workload:
+    base = arch_kernels(cfg, batch, seq, step="train")
+
+    def iteration(idx: int) -> List[SimKernel]:
+        return base
+
+    return Workload(name=f"{cfg.name}-train", kind="train", priority=priority,
+                    iteration=iteration, samples_per_iteration=batch)
+
+
+def arch_inference_workload(cfg, batch: int, seq: int, priority: int = 0
+                            ) -> Workload:
+    base = arch_kernels(cfg, batch, seq, step="infer")
+
+    def iteration(idx: int) -> List[SimKernel]:
+        return base
+
+    return Workload(name=f"{cfg.name}-infer", kind="infer", priority=priority,
+                    iteration=iteration, samples_per_iteration=batch)

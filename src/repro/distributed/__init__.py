@@ -1,0 +1,4 @@
+from repro.distributed.sharding import (constrain, logical_to_spec,
+                                        tree_shardings, use_mesh)
+
+__all__ = ["constrain", "logical_to_spec", "tree_shardings", "use_mesh"]

@@ -1,0 +1,104 @@
+"""Gradient compression with error feedback (int8 block-quantized).
+
+At 1000+-node scale, DP gradient all-reduce over the pod axis dominates
+the step at small per-chip batch. Block-wise int8 quantization with error
+feedback (residual carried to the next step) cuts the collective payload
+4x vs bf16 while keeping convergence (the residual makes the quantizer
+unbiased over time).
+
+Usage in the train step:
+    q, scale, new_resid = compress(grad + resid)
+    q_sum = lax.psum(q, axis)           # int32-accumulated all-reduce
+    grad_hat = decompress(q_sum, scale_sum)
+
+Here we expose the pure (compress, decompress, error-feedback) transforms
+plus a pytree wrapper; the launcher wires them into the step when
+``--grad-compression`` is on. Quantization is per-block (last dim tiled by
+``block``) so scales stay local and outliers do not poison whole tensors.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class CompressionConfig:
+    block: int = 256
+    enabled: bool = True
+
+
+class Compressed(NamedTuple):
+    q: jax.Array          # int8, padded to block multiple
+    scale: jax.Array      # fp32 per block
+    shape: Tuple[int, ...]
+
+
+def _pad_to_block(flat: jax.Array, block: int) -> jax.Array:
+    n = flat.shape[0]
+    pad = (-n) % block
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    return flat
+
+
+def compress(x: jax.Array, block: int = 256) -> Compressed:
+    """Symmetric per-block int8 quantization."""
+    shape = x.shape
+    flat = _pad_to_block(x.astype(jnp.float32).reshape(-1), block)
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return Compressed(q=q, scale=scale[:, 0], shape=tuple(shape))
+
+
+def decompress(c: Compressed) -> jax.Array:
+    flat = (c.q.astype(jnp.float32) * c.scale[:, None]).reshape(-1)
+    n = int(np.prod(c.shape))
+    return flat[:n].reshape(c.shape)
+
+
+def quantization_error(x: jax.Array, block: int = 256) -> jax.Array:
+    return x.astype(jnp.float32) - decompress(compress(x, block))
+
+
+def ef_compress_tree(grads, residuals, block: int = 256):
+    """Error-feedback step: returns (compressed tree, new residual tree).
+
+    ``decompress_tree`` of the result equals (grads + residuals) -
+    new_residuals exactly; the residual is what the quantizer dropped.
+    """
+    def one(g, r):
+        corrected = g.astype(jnp.float32) + r
+        c = compress(corrected, block)
+        return c, corrected - decompress(c)
+
+    leaves_g, treedef = jax.tree.flatten(grads)
+    leaves_r = treedef.flatten_up_to(residuals)
+    outs = [one(g, r) for g, r in zip(leaves_g, leaves_r)]
+    return (treedef.unflatten([o[0] for o in outs]),
+            treedef.unflatten([o[1] for o in outs]))
+
+
+def decompress_tree(ctree):
+    return jax.tree.map(decompress, ctree,
+                        is_leaf=lambda x: isinstance(x, Compressed))
+
+
+def init_residuals(params):
+    return jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def payload_bytes(tree) -> int:
+    """Collective payload of a (possibly compressed) gradient tree."""
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        total += leaf.size * leaf.dtype.itemsize
+    return total

@@ -1,0 +1,3 @@
+"""Pallas TPU kernels for the compute hot-spots Tally schedules:
+tiled matmul, flash attention, mamba2 SSD chunk-scan. Each is exposed as a
+Tally-transformable KernelDescriptor (see repro.core.descriptor)."""

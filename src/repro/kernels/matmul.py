@@ -1,0 +1,58 @@
+"""Tiled matmul Pallas kernel (TPU target; interpret=True on CPU).
+
+Grid (nm, nn, nk): (m, n) parallel — the Tally-schedulable blocks — and k
+sequential (accumulation into the output tile, MXU-aligned block shapes).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.descriptor import BlockMap, KernelDescriptor
+
+
+def _pick_block(dim: int, target: int) -> int:
+    """Largest divisor of dim <= target (prefer MXU-aligned 128 multiples)."""
+    b = min(dim, target)
+    while dim % b:
+        b -= 1
+    return b
+
+
+def matmul_body(pids, a_ref, b_ref, o_ref):
+    k = pids[2]
+
+    @pl.when(k == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                          preferred_element_type=jnp.float32)
+
+
+def matmul_desc(M: int, K: int, N: int, dtype=jnp.float32, *,
+                bm: int = 128, bk: int = 512, bn: int = 128,
+                interpret: bool = True) -> KernelDescriptor:
+    bm = _pick_block(M, bm)
+    bk = _pick_block(K, bk)
+    bn = _pick_block(N, bn)
+    grid = (M // bm, N // bn, K // bk)
+    itemsize = jnp.dtype(dtype).itemsize
+    return KernelDescriptor(
+        name=f"matmul_{M}x{K}x{N}",
+        body=matmul_body,
+        grid=grid,
+        in_maps=(BlockMap((bm, bk), lambda i, j, k: (i, k)),
+                 BlockMap((bk, bn), lambda i, j, k: (k, j))),
+        out_maps=(BlockMap((bm, bn), lambda i, j, k: (i, j)),),
+        out_shape=(jax.ShapeDtypeStruct((M, N), jnp.float32),),
+        parallel_axes=(0, 1),
+        flops=2.0 * M * N * K,
+        bytes_accessed=float((M * K + K * N) * itemsize + M * N * 4),
+        interpret=interpret,
+        revisits_output=True,
+    )

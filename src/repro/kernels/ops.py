@@ -1,0 +1,58 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+These are the entry points models call when ``cfg.use_pallas`` — the
+cuBLAS->CUTLASS replacement analog: hot XLA ops routed through open,
+Tally-transformable kernels.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.descriptor import build_plain
+from repro.kernels.flash_attention import flash_attention_desc
+from repro.kernels.matmul import matmul_desc
+from repro.kernels.mamba2_scan import mamba2_scan_desc
+
+
+@partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def matmul(a: jax.Array, b: jax.Array, *, bm: int = 128, bk: int = 512,
+           bn: int = 128) -> jax.Array:
+    """a (..., M, K) @ b (K, N) via the Pallas kernel; output a.dtype."""
+    *lead, M, K = a.shape
+    N = b.shape[-1]
+    a2 = a.reshape(-1, K)
+    desc = matmul_desc(a2.shape[0], K, N, a.dtype, bm=bm, bk=bk, bn=bn)
+    out = build_plain(desc)(a2, b)[0]
+    return out.reshape(*lead, M, N).astype(a.dtype)
+
+
+@partial(jax.jit, static_argnames=("causal", "bq", "bk"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, bq: int = 256,
+                    bk: int = 512) -> jax.Array:
+    """q (B,S,H,D); k,v (B,T,KVH,D) -> (B,S,H,D)."""
+    B, S, H, D = q.shape
+    T, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * KVH, T, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * KVH, T, D)
+    desc = flash_attention_desc(B * H, S, T, D, G, q.dtype, causal=causal,
+                                bq=bq, bk=bk)
+    out = build_plain(desc)(qf, kf, vf)[0]
+    return out.reshape(B, H, S, D).transpose(0, 2, 1, 3)
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def mamba2_scan(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                Cm: jax.Array, D: jax.Array, *, chunk: int = 256):
+    """Chunked SSD scan. x (B,S,NH,HD), dt (B,S,NH), A (NH,), Bm/Cm (B,S,DS),
+    D (NH,). Returns (y (B,S,NH,HD) x.dtype, h_final (B,NH,HD,DS) f32)."""
+    B, S, NH, HD = x.shape
+    DS = Bm.shape[-1]
+    desc = mamba2_scan_desc(B, S, NH, HD, DS, chunk, x.dtype)
+    y, h = build_plain(desc)(x, dt, A, Bm, Cm, D)
+    return y, h

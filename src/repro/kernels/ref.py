@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel (independent implementations)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, group: int = 1,
+                  q_offset: int = 0) -> jax.Array:
+    """Naive softmax attention. q (BH,S,D); k,v (BKV,T,D); BH = BKV*group."""
+    BH, S, D = q.shape
+    T = k.shape[1]
+    k = jnp.repeat(k, group, axis=0)
+    v = jnp.repeat(v, group, axis=0)
+    s = jnp.einsum("bsd,btd->bst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    if causal:
+        qpos = q_offset + jnp.arange(S)[:, None]
+        kpos = jnp.arange(T)[None, :]
+        s = jnp.where(qpos >= kpos, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bst,btd->bsd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def ssd_ref(x, dt, A, Bm, Cm, D):
+    """Sequential (per-token) SSD recurrence — independent of the chunked
+    algorithm. x (B,S,NH,HD), dt (B,S,NH), A (NH,), Bm/Cm (B,S,DS), D (NH,).
+    Returns (y (B,S,NH,HD) f32, h_final (B,NH,HD,DS) f32)."""
+    B, S, NH, HD = x.shape
+    DS = Bm.shape[-1]
+    x = x.astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+    Bm = Bm.astype(jnp.float32)
+    Cm = Cm.astype(jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp
+        a = jnp.exp(dtt * A[None])                       # (B,NH)
+        h = a[..., None, None] * h + jnp.einsum(
+            "bh,bhd,be->bhde", dtt, xt, bt)
+        y = jnp.einsum("bhde,be->bhd", h, ct) + xt * D[None, :, None]
+        return h, y
+
+    h0 = jnp.zeros((B, NH, HD, DS), jnp.float32)
+    hf, ys = jax.lax.scan(
+        step, h0, (x.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+                   Bm.transpose(1, 0, 2), Cm.transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2, 3), hf

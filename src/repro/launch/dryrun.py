@@ -1,0 +1,309 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any other import (jax locks the device
+count at first init); 512 placeholder host devices back both production
+meshes: (16,16) single-pod and (2,16,16) multi-pod.
+
+Per cell this driver
+  1. builds the step (train_step for train shapes, serve/prefill steps for
+     inference shapes) with explicit in/out shardings,
+  2. ``jax.jit(...).lower(**ShapeDtypeStructs)`` — no allocation,
+  3. ``.compile()`` — SPMD partitioning must succeed,
+  4. records ``memory_analysis()`` (fits-in-HBM proof),
+     ``cost_analysis()`` (FLOPs/bytes) and per-collective byte totals
+     parsed from the optimized HLO — the inputs to EXPERIMENTS.md
+     roofline.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen2.5-14b --shape train_4k \
+        --mesh single --out benchmarks/results/dryrun
+    python -m repro.launch.dryrun --all [--mesh both]
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.configs.base import (SHAPES, ModelConfig, ShapeConfig,
+                                all_arch_names, get_config, input_specs,
+                                shape_applicable)
+from repro.distributed.sharding import use_mesh
+from repro.launch.mesh import make_production_mesh, mesh_info
+from repro.launch.steps import make_step
+
+# TPU v5e hardware constants (per chip) — roofline denominators
+PEAK_FLOPS = 197e12            # bf16
+HBM_BW = 819e9                 # bytes/s
+ICI_BW = 50e9                  # bytes/s per link
+HBM_BYTES = 16 * 2 ** 30       # 16 GiB
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+                "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum byte sizes of every `dtype[dims]` group in `text`."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-collective byte totals from optimized HLO.
+
+    Counts the RESULT shapes of each collective op (x2 for all-reduce:
+    ring reduce-scatter + all-gather phases move ~2x the payload).
+    """
+    out = {k: {"count": 0, "bytes": 0.0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if not s or "=" not in s:
+            continue
+        for op in _COLLECTIVES:
+            # match ` op(`, excluding fusions mentioning the op in metadata
+            if f" {op}(" in s or f" {op}-start(" in s:
+                lhs = s.split("=", 1)[0] + "=" + \
+                    s.split("=", 1)[1].split(op)[0]
+                b = _shape_bytes(lhs)
+                factor = 2.0 if op == "all-reduce" else 1.0
+                out[op]["count"] += 1
+                out[op]["bytes"] += b * factor
+                break
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+def _first(d, *keys, default=0.0):
+    for k in keys:
+        if k in d:
+            return float(d[k])
+    return float(default)
+
+
+def _cell_costs(cfg, shape, mesh):
+    """(flops, bytes, collective dict) for one compiled step."""
+    with mesh, use_mesh(mesh):
+        bundle = make_step(cfg, mesh, shape)
+        compiled = jax.jit(bundle.fn,
+                           in_shardings=bundle.in_shardings,
+                           out_shardings=bundle.out_shardings,
+                           donate_argnums=bundle.donate_argnums
+                           ).lower(*bundle.abstract_inputs).compile()
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else {}
+        coll = collective_bytes(compiled.as_text())
+    return (_first(cost, "flops"),
+            _first(cost, "bytes accessed", "bytes_accessed"), coll)
+
+
+def probe_costs(cfg, shape, mesh):
+    """Exact per-device (flops, bytes, collective bytes) via depth probes.
+
+    XLA's ``cost_analysis`` counts a while-loop (lax.scan) body ONCE, so a
+    scanned L-layer model under-reports by the trip count. We lower the
+    same step at depth = 1x and 2x the layer period; costs are linear in
+    depth (rest + T*body), so two points recover the exact totals:
+        body = C(2) - C(1);   corrected = C(1) + (T - 1) * body.
+    """
+    import dataclasses as _dc
+    from repro.models.transformer import layer_period
+    period = layer_period(cfg)
+    trips = cfg.num_layers // period
+    if trips <= 1:
+        return _cell_costs(_dc.replace(cfg, exact_costs=True,
+                                       unroll_stack=True), shape, mesh)
+    enc = cfg.encoder_layers
+    # encoder stack must scale with the trip count for linearity to hold
+    enc1 = max(1, enc // trips) if enc else 0
+    cfg1 = _dc.replace(cfg, num_layers=period, encoder_layers=enc1,
+                       unroll_stack=True, exact_costs=True)
+    cfg2 = _dc.replace(cfg, num_layers=2 * period,
+                       encoder_layers=2 * enc1 if enc else 0,
+                       unroll_stack=True, exact_costs=True)
+    f1, b1, c1 = _cell_costs(cfg1, shape, mesh)
+    f2, b2, c2 = _cell_costs(cfg2, shape, mesh)
+
+    def extrap(x1, x2):
+        body = max(x2 - x1, 0.0)
+        return x1 + (trips - 1) * body
+
+    coll = {}
+    for k in _COLLECTIVES:
+        coll[k] = {
+            "count": int(extrap(c1[k]["count"], c2[k]["count"])),
+            "bytes": extrap(c1[k]["bytes"], c2[k]["bytes"]),
+        }
+    coll["total_bytes"] = sum(v["bytes"] for v in coll.values()
+                              if isinstance(v, dict))
+    return extrap(f1, f2), extrap(b1, b2), coll
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: Path) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_tag = "multi" if multi_pod else "single"
+    cell = {"arch": arch, "shape": shape_name, "mesh": mesh_tag}
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        cell.update(status="skip", reason=reason)
+        return cell
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev, sizes = mesh_info(mesh)
+    try:
+        with mesh, use_mesh(mesh):
+            bundle = make_step(cfg, mesh, shape)
+            jitted = jax.jit(bundle.fn,
+                             in_shardings=bundle.in_shardings,
+                             out_shardings=bundle.out_shardings,
+                             donate_argnums=bundle.donate_argnums)
+            lowered = jitted.lower(*bundle.abstract_inputs)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+        # scan-corrected exact costs via two shallow probes (see probe_costs)
+        flops, bytes_accessed, coll = probe_costs(cfg, shape, mesh)
+    except Exception as e:                     # noqa: BLE001
+        cell.update(status="error", error=f"{type(e).__name__}: {e}",
+                    traceback=traceback.format_exc()[-4000:])
+        return cell
+    mem_stats = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            mem_stats[attr] = int(v)
+    # arguments are aliased (donated) where possible; peak ~ args + temp
+    per_dev_hbm = (mem_stats.get("argument_size_in_bytes", 0)
+                   + mem_stats.get("temp_size_in_bytes", 0)
+                   + mem_stats.get("output_size_in_bytes", 0)
+                   - mem_stats.get("alias_size_in_bytes", 0))
+
+    # roofline terms (seconds) — single-chip rates, per-device quantities
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_accessed / HBM_BW
+    collective_s = coll["total_bytes"] / ICI_BW
+
+    params = cfg.param_count()
+    active = cfg.active_param_count()
+    tokens = shape.global_batch * (shape.seq_len
+                                   if shape.kind in ("train", "prefill")
+                                   else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    model_flops_global = mult * active * tokens
+    model_flops_per_dev = model_flops_global / n_dev
+
+    cell.update(
+        status="ok",
+        mesh_shape=list(mesh.devices.shape),
+        n_devices=n_dev,
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        flops_per_device=flops,
+        bytes_per_device=bytes_accessed,
+        collectives=coll,
+        memory=mem_stats,
+        per_device_hbm_bytes=int(per_dev_hbm),
+        fits_hbm=bool(per_dev_hbm <= HBM_BYTES),
+        roofline={
+            "compute_s": compute_s,
+            "memory_s": memory_s,
+            "collective_s": collective_s,
+            "dominant": max(
+                (("compute", compute_s), ("memory", memory_s),
+                 ("collective", collective_s)), key=lambda kv: kv[1])[0],
+        },
+        model={
+            "params": params,
+            "active_params": active,
+            "tokens": tokens,
+            "model_flops_per_device": model_flops_per_dev,
+            "useful_flop_ratio": (model_flops_per_dev / flops
+                                  if flops else 0.0),
+        },
+    )
+    return cell
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=all_arch_names())
+    ap.add_argument("--shape", choices=sorted(SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="benchmarks/results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args(argv)
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    if args.all:
+        cells = [(a, s) for a in all_arch_names() for s in SHAPES]
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    failures = 0
+    for arch, shape_name in cells:
+        for multi in meshes:
+            tag = "multi" if multi else "single"
+            path = out_dir / f"{arch}__{shape_name}__{tag}.json"
+            if args.skip_existing and path.exists():
+                prev = json.loads(path.read_text())
+                if prev.get("status") in ("ok", "skip"):
+                    print(f"[skip existing] {path.name}")
+                    continue
+            print(f"[dryrun] {arch} x {shape_name} x {tag} ...",
+                  flush=True)
+            cell = run_cell(arch, shape_name, multi, out_dir)
+            path.write_text(json.dumps(cell, indent=1))
+            st = cell["status"]
+            if st == "ok":
+                r = cell["roofline"]
+                print(f"  ok: compile={cell['compile_s']}s "
+                      f"hbm={cell['per_device_hbm_bytes']/2**30:.2f}GiB "
+                      f"fits={cell['fits_hbm']} dominant={r['dominant']} "
+                      f"(c={r['compute_s']:.4f}s m={r['memory_s']:.4f}s "
+                      f"coll={r['collective_s']:.4f}s)", flush=True)
+            elif st == "skip":
+                print(f"  skip: {cell['reason']}")
+            else:
+                failures += 1
+                print(f"  ERROR: {cell['error']}", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,31 @@
+"""Production meshes.
+
+Defined as FUNCTIONS (never module-level constants) so importing this
+module never touches jax device state — the dry-run pins the device count
+via XLA_FLAGS before first jax init; everything else sees the real
+topology.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Whatever this host actually has — used by smoke tests/examples."""
+    n = len(jax.devices())
+    mp = max(1, min(model_parallel, n))
+    return jax.make_mesh((n // mp, mp), ("data", "model"))
+
+
+def mesh_info(mesh) -> Tuple[int, dict]:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return int(mesh.devices.size), sizes

@@ -1,0 +1,109 @@
+"""Serving driver: batched inference + Tally-co-located best-effort training.
+
+Demonstrates the paper's end-to-end scenario on real (reduced) models:
+a high-priority serving engine handles MAF2-style traffic while a
+best-effort training job consumes idle quanta through the opportunistic
+hook — the engine-level mirror of Fig. 4 (the kernel-level path is
+``core.virtualization``).
+
+    python -m repro.launch.serve --arch qwen2.5-14b --requests 24 \
+        --colocate-train
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import all_arch_names, get_config
+from repro.core.metrics import LatencyStats
+from repro.core.traffic import maf2_like_trace
+from repro.models.transformer import build_model
+from repro.serving import Request, ServingConfig, ServingEngine
+
+
+def serve(arch: str, *, requests: int = 16, capacity: int = 4,
+          max_len: int = 96, max_new_tokens: int = 8,
+          colocate_train: bool = False, seed: int = 0,
+          mean_rate: float = 50.0) -> dict:
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+
+    be_state = {"quanta": 0}
+    be_step = None
+    if colocate_train:
+        from repro.configs.base import ShapeConfig
+        from repro.launch.mesh import make_host_mesh
+        from repro.launch.steps import make_optimizer, make_train_step
+        from repro.data import DataConfig, SyntheticLMDataset
+        mesh = make_host_mesh()
+        bundle = make_train_step(model, mesh, ShapeConfig("be", 32, 2,
+                                                          "train"))
+        be_fn = jax.jit(bundle.fn)
+        be_params = model.init(jax.random.PRNGKey(seed + 1))
+        be_opt = make_optimizer(cfg).init(be_params)
+        ds = SyntheticLMDataset(DataConfig(cfg.vocab_size, 32, 2,
+                                           seed=seed))
+
+        def be_step():
+            nonlocal be_params, be_opt
+            b = {k: jnp.asarray(v)
+                 for k, v in ds.batch_at(be_state["quanta"]).items()}
+            be_params, be_opt, _m = be_fn(be_params, be_opt, b)
+            be_state["quanta"] += 1
+
+    engine = ServingEngine(model, params, ServingConfig(capacity, max_len),
+                           best_effort_hook=be_step)
+    rng = np.random.default_rng(seed)
+    trace = maf2_like_trace(duration=requests / mean_rate * 2,
+                            mean_rate=mean_rate, seed=seed)
+    arrivals = trace.arrivals[:requests]
+    t0 = time.monotonic()
+    submitted = 0
+    lat = LatencyStats()
+    while submitted < len(arrivals) or engine.queue or engine.n_active:
+        now = time.monotonic() - t0
+        while submitted < len(arrivals) and arrivals[submitted] <= now:
+            prompt = rng.integers(0, cfg.vocab_size,
+                                  size=int(rng.integers(4, 12)))
+            engine.submit(prompt.astype(np.int32),
+                          max_new_tokens=max_new_tokens)
+            submitted += 1
+        if not engine.step():
+            time.sleep(0.001)
+    for r in engine.done:
+        lat.record(r.latency)
+    return {
+        "arch": arch,
+        "requests": len(engine.done),
+        "p50_ms": lat.p50() * 1e3,
+        "p99_ms": lat.p99() * 1e3,
+        "be_quanta": be_state["quanta"],
+        "wall_s": time.monotonic() - t0,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=all_arch_names(),
+                    default="qwen2.5-14b")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--capacity", type=int, default=4)
+    ap.add_argument("--max-new-tokens", type=int, default=8)
+    ap.add_argument("--colocate-train", action="store_true")
+    args = ap.parse_args(argv)
+    out = serve(args.arch, requests=args.requests, capacity=args.capacity,
+                max_new_tokens=args.max_new_tokens,
+                colocate_train=args.colocate_train)
+    print(json.dumps(out, indent=1))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,309 @@
+"""Step builders: pjit-able train / prefill / decode steps for every arch.
+
+Shared by the real training driver (``launch/train.py``), the serving
+driver (``launch/serve.py``) and the multi-pod dry-run
+(``launch/dryrun.py``). All builders are pure: (model, config, options) ->
+(step_fn, abstract input tree, sharding trees) — the dry-run lowers the
+step against ShapeDtypeStructs, the drivers call it with real arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
+
+from repro.configs.base import (ModelConfig, ShapeConfig, input_specs,
+                                kv_cache_specs)
+from repro.distributed.sharding import (DEFAULT_RULES, INFER_PARAM_RULES,
+                                        PARAM_RULES, is_axes_leaf,
+                                        logical_to_spec, tree_shardings,
+                                        use_mesh)
+from repro.models.transformer import TransformerLM, build_model, loss_fn
+from repro.optim.adafactor import (AdafactorConfig, adafactor_init,
+                                   adafactor_slot_axes,
+                                   adafactor_slot_shapes, adafactor_update)
+from repro.optim.adamw import (AdamWConfig, OptState, adamw_init,
+                               adamw_update)
+from repro.optim.schedule import Schedule, constant
+
+
+# ---------------------------------------------------------------------------
+# Logical axes for non-param inputs
+# ---------------------------------------------------------------------------
+
+
+def batch_axes(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    ax: Dict[str, Any] = {"tokens": ("batch", "seq")}
+    if shape.kind == "train":
+        ax["targets"] = ("batch", "seq")
+    if cfg.encoder_layers and shape.kind in ("train", "prefill"):
+        ax["encoder_embeds"] = ("batch", "frames", None)
+    if cfg.mrope_sections is not None:
+        ax["positions"] = (None, "batch", "seq")
+    if shape.kind in ("decode", "long_decode"):
+        ax["cache"] = kv_cache_axes(cfg)
+        ax["cache_index"] = ()
+    return ax
+
+
+def kv_cache_axes(cfg: ModelConfig) -> Dict[str, Any]:
+    axes: Dict[str, Any] = {}
+    n_attn = sum(cfg.is_attention_layer(i) for i in range(cfg.num_layers))
+    if n_attn:
+        axes["k"] = ("layer", "batch", "kv_seq", "kv_heads", None)
+        axes["v"] = ("layer", "batch", "kv_seq", "kv_heads", None)
+    if cfg.family in ("ssm", "hybrid"):
+        axes["ssm_state"] = ("layer", "batch", "ssm_heads", None, None)
+        axes["conv_state"] = ("layer", "batch", None, "conv_dim")
+    if cfg.encoder_layers:
+        axes["cross_k"] = ("layer", "batch", "frames", "kv_heads", None)
+        axes["cross_v"] = ("layer", "batch", "frames", "kv_heads", None)
+    return axes
+
+
+# ---------------------------------------------------------------------------
+# Optimizer plumbing (adamw | adafactor, selected per config)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class OptBundle:
+    init: Callable[[Any], Any]
+    update: Callable[..., Tuple[Any, Any, jax.Array]]
+    state_shapes: Callable[[Any], Any]
+    state_axes: Callable[[Any], Any]
+
+
+def make_optimizer(cfg: ModelConfig, lr: float = 3e-4) -> OptBundle:
+    if cfg.optimizer == "adafactor":
+        ocfg = AdafactorConfig(lr=lr)
+        return OptBundle(
+            init=adafactor_init,
+            update=partial(adafactor_update, ocfg),
+            state_shapes=adafactor_slot_shapes,
+            state_axes=adafactor_slot_axes,
+        )
+    ocfg = AdamWConfig(lr=lr)
+
+    def state_shapes(param_shapes):
+        f32 = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+            param_shapes)
+        return OptState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                        mu=f32, nu=jax.tree.map(lambda x: x, f32))
+
+    def state_axes(param_axes):
+        return OptState(step=(), mu=param_axes,
+                        nu=jax.tree.map(lambda a: a, param_axes,
+                                        is_leaf=is_axes_leaf))
+
+    def update(params, grads, state, lr_scale=1.0):
+        return adamw_update(ocfg, params, grads, state, lr_scale)
+
+    return OptBundle(init=adamw_init, update=update,
+                     state_shapes=state_shapes, state_axes=state_axes)
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class StepBundle:
+    """Everything a driver/dry-run needs for one (arch x shape) cell."""
+
+    fn: Callable                      # the step function (to be jitted)
+    abstract_inputs: Tuple[Any, ...]  # ShapeDtypeStruct pytrees (positional)
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+
+
+def make_train_step(model: TransformerLM, mesh: Mesh,
+                    shape: ShapeConfig, *,
+                    schedule: Optional[Schedule] = None,
+                    num_microbatches: int = 1,
+                    lr: float = 3e-4) -> StepBundle:
+    cfg = model.cfg
+    opt = make_optimizer(cfg, lr)
+    sched = schedule or constant(1.0)
+
+    def compute_grads(params, batch):
+        def lf(p):
+            loss, parts = loss_fn(model, p, batch)
+            return loss, parts
+        (loss, parts), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        return loss, parts, grads
+
+    def train_step(params, opt_state, batch):
+        if num_microbatches > 1:
+            mb = {k: v.reshape((num_microbatches,
+                                v.shape[0] // num_microbatches) + v.shape[1:])
+                  for k, v in batch.items()}
+
+            def body(acc, mbatch):
+                loss, parts, grads = compute_grads(params, mbatch)
+                acc_g, acc_l = acc
+                return (jax.tree.map(jnp.add, acc_g, grads),
+                        acc_l + loss), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(
+                body, (zeros, jnp.float32(0.0)), mb)
+            grads = jax.tree.map(lambda g: g / num_microbatches, grads)
+            loss = loss / num_microbatches
+        else:
+            loss, _parts, grads = compute_grads(params, batch)
+        step = (opt_state.step if hasattr(opt_state, "step")
+                else opt_state[0])
+        new_params, new_state, gnorm = opt.update(params, grads, opt_state,
+                                                  sched(step))
+        metrics = {"loss": loss.astype(jnp.float32),
+                   "grad_norm": gnorm.astype(jnp.float32)}
+        return new_params, new_state, metrics
+
+    param_shapes = model.param_shapes()
+    param_axes = model.param_axes()
+    opt_shapes = opt.state_shapes(param_shapes)
+    opt_axes = opt.state_axes(param_axes)
+    bspecs = input_specs(cfg, shape)
+    baxes = batch_axes(cfg, shape)
+
+    p_sh = tree_shardings(param_axes, mesh, PARAM_RULES, param_shapes)
+    o_sh = tree_shardings(opt_axes, mesh, PARAM_RULES, opt_shapes)
+    b_sh = tree_shardings(baxes, mesh, DEFAULT_RULES, bspecs)
+    rep = NamedSharding(mesh, PS())
+    m_sh = {"loss": rep, "grad_norm": rep}
+    return StepBundle(
+        fn=train_step,
+        abstract_inputs=(param_shapes, opt_shapes, bspecs),
+        in_shardings=(p_sh, o_sh, b_sh),
+        out_shardings=(p_sh, o_sh, m_sh),
+        donate_argnums=(0, 1),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Serving steps
+# ---------------------------------------------------------------------------
+
+
+def serving_param_shapes(model: TransformerLM):
+    """Serving weights are model-dtype (bf16), not fp32 masters."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, model.cfg.dtype),
+        model.param_shapes())
+
+
+# dims eligible for the serving fallback shard (any of these divisible by
+# the model axis => the weight need not be replicated)
+_FALLBACK_AXES = ("embed", "mlp", "expert_mlp", "vocab")
+
+
+def serving_param_shardings(param_axes, param_shapes, mesh):
+    """INFER_PARAM_RULES + fallback: a weight whose preferred dims do not
+    divide the model axis (e.g. 56 heads / 8 kv heads over 16) falls back
+    to sharding its embed dim — never replicate multi-GB weights."""
+    from jax.sharding import NamedSharding
+    model_size = dict(zip(mesh.axis_names,
+                          mesh.devices.shape)).get("model", 1)
+
+    def one(axes, shp):
+        spec = logical_to_spec(axes, mesh, INFER_PARAM_RULES, shp.shape)
+        if any(e is not None for e in spec) or model_size == 1:
+            return NamedSharding(mesh, spec)
+        entries = [None] * len(axes)
+        for i, ax in enumerate(axes):
+            if ax in _FALLBACK_AXES and shp.shape[i] % model_size == 0:
+                entries[i] = "model"
+                break
+        return NamedSharding(mesh, PS(*entries))
+
+    return jax.tree.map(one, param_axes, param_shapes,
+                        is_leaf=is_axes_leaf)
+
+
+def make_prefill_step(model: TransformerLM, mesh: Mesh,
+                      shape: ShapeConfig) -> StepBundle:
+    cfg = model.cfg
+
+    def prefill_step(params, batch):
+        logits, cache = model.prefill(
+            params, batch["tokens"],
+            positions=batch.get("positions"),
+            encoder_embeds=batch.get("encoder_embeds"))
+        return logits, cache
+
+    param_shapes = serving_param_shapes(model)
+    param_axes = model.param_axes()
+    bspecs = input_specs(cfg, shape)
+    baxes = batch_axes(cfg, shape)
+    p_sh = serving_param_shardings(param_axes, param_shapes, mesh)
+    b_sh = tree_shardings(baxes, mesh, DEFAULT_RULES, bspecs)
+    logits_sh = NamedSharding(mesh, logical_to_spec(
+        ("batch", None, "vocab"), mesh, DEFAULT_RULES,
+        shape=(shape.global_batch, 1, cfg.vocab_size)))
+    cache_specs = kv_cache_specs(cfg, shape.global_batch, shape.seq_len)
+    cache_sh = tree_shardings(kv_cache_axes(cfg), mesh, DEFAULT_RULES,
+                              cache_specs)
+    return StepBundle(
+        fn=prefill_step,
+        abstract_inputs=(param_shapes, bspecs),
+        in_shardings=(p_sh, b_sh),
+        out_shardings=(logits_sh, cache_sh),
+        donate_argnums=(),
+    )
+
+
+def make_decode_step(model: TransformerLM, mesh: Mesh,
+                     shape: ShapeConfig) -> StepBundle:
+    cfg = model.cfg
+
+    def serve_step(params, batch):
+        logits, new_cache = model.decode_step(
+            params, batch["tokens"], batch["cache"], batch["cache_index"],
+            positions=batch.get("positions"))
+        return logits, new_cache
+
+    param_shapes = serving_param_shapes(model)
+    param_axes = model.param_axes()
+    bspecs = input_specs(cfg, shape)
+    baxes = batch_axes(cfg, shape)
+    p_sh = serving_param_shardings(param_axes, param_shapes, mesh)
+    b_sh = tree_shardings(baxes, mesh, DEFAULT_RULES, bspecs)
+    logits_sh = NamedSharding(mesh, logical_to_spec(
+        ("batch", None, "vocab"), mesh, DEFAULT_RULES,
+        shape=(shape.global_batch, 1, cfg.vocab_size)))
+    cache_sh = b_sh["cache"]
+    return StepBundle(
+        fn=serve_step,
+        abstract_inputs=(param_shapes, bspecs),
+        in_shardings=(p_sh, b_sh),
+        out_shardings=(logits_sh, cache_sh),
+        donate_argnums=(1,),          # cache buffers are reused
+    )
+
+
+def make_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
+              **kw) -> StepBundle:
+    if (shape.kind in ("decode", "long_decode")
+            and os.environ.get("REPRO_OPT_UNROLL_DECODE", "1") == "1"):
+        # §Perf OPT4: serving decode unrolls the layer stack. With a
+        # scanned stack, GSPMD hoists the all-gather of the whole STACKED
+        # weight tensor out of the loop (14+ GiB live for 33B); unrolled,
+        # weights gather per layer and are freed immediately.
+        cfg = dataclasses.replace(cfg, unroll_stack=True)
+    model = build_model(cfg)
+    if shape.kind == "train":
+        return make_train_step(model, mesh, shape, **kw)
+    if shape.kind == "prefill":
+        return make_prefill_step(model, mesh, shape)
+    return make_decode_step(model, mesh, shape)

@@ -1,0 +1,92 @@
+"""Param-spec DSL: declarative parameter trees with logical sharding axes.
+
+Models declare a pytree of ``P`` specs; from one spec tree we derive
+ - materialized params           (init_from_specs, smoke tests / real training)
+ - abstract shapes               (shapes_from_specs, dry-run lowering)
+ - logical-axis tree             (axes_from_specs -> distributed.sharding)
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Axes = Tuple[Optional[str], ...]
+
+
+@dataclass(frozen=True)
+class P:
+    """One parameter: shape + logical axes (len == ndim) + initializer."""
+
+    shape: Tuple[int, ...]
+    axes: Axes
+    init: str = "normal"       # normal | zeros | ones | small_log
+    scale: float = 1.0
+    dtype: Any = None          # None -> model param_dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, P)
+
+
+def tree_map_specs(fn: Callable[[P], Any], specs):
+    return jax.tree.map(fn, specs, is_leaf=is_spec)
+
+
+def stacked(n: int, specs):
+    """Prepend a scanned 'layer' dimension to every spec in the subtree."""
+    return tree_map_specs(
+        lambda p: dataclasses.replace(p, shape=(n,) + p.shape,
+                                      axes=("layer",) + p.axes),
+        specs)
+
+
+def shapes_from_specs(specs, param_dtype=jnp.float32):
+    return tree_map_specs(
+        lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype or param_dtype), specs)
+
+
+def axes_from_specs(specs):
+    return tree_map_specs(lambda p: p.axes, specs)
+
+
+def _init_one(p: P, key, param_dtype) -> jax.Array:
+    dtype = p.dtype or param_dtype
+    if p.init == "zeros":
+        return jnp.zeros(p.shape, dtype)
+    if p.init == "ones":
+        return jnp.ones(p.shape, dtype)
+    if p.init == "small_log":   # mamba A_log-style init in (log 1 .. log 16)
+        u = jax.random.uniform(key, p.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(dtype)
+    if p.init == "fan_last":    # std = scale / sqrt(last dim)  (embeddings)
+        std = p.scale / np.sqrt(p.shape[-1])
+        return (jax.random.normal(key, p.shape, jnp.float32) * std
+                ).astype(dtype)
+    fan_in = p.shape[-2] if len(p.shape) >= 2 else p.shape[-1]
+    std = p.scale / np.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, p.shape, jnp.float32) * std).astype(dtype)
+
+
+def init_from_specs(specs, rng, param_dtype=jnp.float32):
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(rng, len(leaves))
+    arrays = [_init_one(p, k, param_dtype) for p, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, arrays)
+
+
+def param_count_tree(params) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+
+
+def cast_tree(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating)
+        else x, tree)

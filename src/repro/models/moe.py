@@ -1,0 +1,101 @@
+"""Mixture-of-Experts: top-k router + capacity-based einsum dispatch (GShard
+style), expert-parallel over the "expert" logical axis. Supports an
+arctic-style parallel dense residual branch.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.common import P
+
+
+def moe_specs(cfg) -> Dict[str, P]:
+    e = cfg.moe
+    d = cfg.d_model
+    specs: Dict[str, P] = {
+        "router": P((d, e.num_experts), ("embed", "expert")),
+        "wi": P((e.num_experts, d, e.d_ff), ("expert", "embed", "expert_mlp")),
+        "wg": P((e.num_experts, d, e.d_ff), ("expert", "embed", "expert_mlp")),
+        "wo": P((e.num_experts, e.d_ff, d), ("expert", "expert_mlp", "embed")),
+    }
+    if e.dense_residual_d_ff:
+        f = e.dense_residual_d_ff
+        specs["dense_wi"] = P((d, f), ("embed", "mlp"))
+        specs["dense_wg"] = P((d, f), ("embed", "mlp"))
+        specs["dense_wo"] = P((f, d), ("mlp", "embed"))
+    return specs
+
+
+def _capacity(tokens_per_group: int, cfg) -> int:
+    e = cfg.moe
+    c = math.ceil(tokens_per_group * e.experts_per_token / e.num_experts
+                  * e.capacity_factor)
+    return max(4, c)
+
+
+def moe_block(params, x: jax.Array, cfg) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (out (B, S, D), aux_loss scalar).
+
+    Each batch row is a dispatch group; tokens routed to top-k experts with
+    per-group capacity C.  Overflow tokens are dropped (standard GShard);
+    the dense residual (if any) catches them.
+    """
+    e = cfg.moe
+    B, S, D = x.shape
+    E, K = e.num_experts, e.experts_per_token
+    C = _capacity(S, cfg)
+    dt = x.dtype
+
+    logits = jnp.einsum("gsd,de->gse", x, params["router"].astype(dt))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)   # (G,S,E)
+
+    # top-k expert choice per token
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)               # (G,S,K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing auxiliary loss (Switch/GShard)
+    me = probs.mean(axis=(0, 1))                                  # (E,)
+    top1 = jax.nn.one_hot(expert_idx[..., 0], E)
+    ce = top1.mean(axis=(0, 1))
+    aux_loss = (E * jnp.sum(me * ce)).astype(jnp.float32)
+
+    # position-in-expert via cumsum over the flattened (token, k) choices,
+    # priority to lower k (primary expert wins capacity first)
+    choice_1h = jax.nn.one_hot(expert_idx, E, dtype=jnp.int32)    # (G,S,K,E)
+    flat = choice_1h.transpose(0, 2, 1, 3).reshape(B, K * S, E)   # k-major
+    pos = jnp.cumsum(flat, axis=1) - 1                            # (G,KS,E)
+    pos = pos.reshape(B, K, S, E).transpose(0, 2, 1, 3)           # (G,S,K,E)
+    # NB: k-major cumsum means all k=0 choices beat k=1 — a deliberate
+    # priority rule (primary routing fills capacity first).
+    within = (pos < C) & (choice_1h > 0)                          # (G,S,K,E)
+
+    pos_c = jax.nn.one_hot(jnp.where(within, pos, C), C, dtype=dt)  # (G,S,K,E,C)
+    dispatch = (within[..., None].astype(dt) * pos_c).sum(axis=2)   # (G,S,E,C)
+    combine = (gate_vals[..., None, None].astype(dt)
+               * within[..., None].astype(dt) * pos_c).sum(axis=2)  # (G,S,E,C)
+
+    dispatch = constrain(dispatch, "batch", None, "expert", None)
+    expert_in = jnp.einsum("gsec,gsd->gecd", dispatch, x)          # (G,E,C,D)
+    expert_in = constrain(expert_in, "batch", "expert", None, None)
+
+    h = jnp.einsum("gecd,edf->gecf", expert_in, params["wg"].astype(dt))
+    g = jnp.einsum("gecd,edf->gecf", expert_in, params["wi"].astype(dt))
+    h = jax.nn.silu(h) * g
+    h = constrain(h, "batch", "expert", None, "expert_mlp")
+    expert_out = jnp.einsum("gecf,efd->gecd", h, params["wo"].astype(dt))
+
+    out = jnp.einsum("gsec,gecd->gsd", combine, expert_out)        # (G,S,D)
+
+    if e.dense_residual_d_ff:
+        dh = (jax.nn.silu(x @ params["dense_wg"].astype(dt))
+              * (x @ params["dense_wi"].astype(dt)))
+        dh = constrain(dh, "batch", None, "mlp")
+        out = out + dh @ params["dense_wo"].astype(dt)
+
+    return constrain(out, "batch", None, "embed"), aux_loss * e.aux_loss_weight

@@ -1,0 +1,9 @@
+from repro.optim.adamw import (AdamWConfig, OptState, adamw_init,
+                               adamw_update, clip_by_global_norm,
+                               global_norm)
+from repro.optim.schedule import (Schedule, constant, cosine_decay,
+                                  linear_warmup_cosine)
+
+__all__ = ["AdamWConfig", "OptState", "adamw_init", "adamw_update",
+           "clip_by_global_norm", "global_norm", "Schedule", "constant",
+           "cosine_decay", "linear_warmup_cosine"]

@@ -1,0 +1,129 @@
+"""Adafactor (Shazeer & Stern 2018): factored second moments, no first
+moment — the memory-frugal optimizer the >=398B assigned archs use so that
+(params + optimizer state) fits pod HBM (see DESIGN.md §4).
+
+For a parameter of shape (..., R, C) the second-moment estimate is stored
+as a row factor (..., R) and a column factor (..., C):  O(R+C) instead of
+O(R*C). 0/1-D parameters keep a full second moment. Update clipping by
+root-mean-square (d=1.0) per the paper.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdafactorConfig:
+    lr: float = 1e-2
+    decay: float = 0.8             # beta2_t = 1 - step^-decay
+    eps1: float = 1e-30
+    eps2: float = 1e-3
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+
+
+class _Factored(NamedTuple):
+    vr: jax.Array                  # (..., R)
+    vc: jax.Array                  # (..., C)
+
+
+class _Full(NamedTuple):
+    v: jax.Array
+
+
+AfSlot = Union[_Factored, _Full]
+
+
+class AfState(NamedTuple):
+    step: jax.Array
+    slots: Any                     # param tree of AfSlot
+
+
+def _is_slot(x) -> bool:
+    return isinstance(x, (_Factored, _Full))
+
+
+def adafactor_init(params) -> AfState:
+    def slot(p):
+        if p.ndim >= 2:
+            return _Factored(vr=jnp.zeros(p.shape[:-1], jnp.float32),
+                             vc=jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                          jnp.float32))
+        return _Full(v=jnp.zeros(p.shape, jnp.float32))
+    return AfState(step=jnp.zeros((), jnp.int32),
+                   slots=jax.tree.map(slot, params))
+
+
+def adafactor_slot_shapes(param_shapes) -> AfState:
+    """ShapeDtypeStruct mirror of ``adafactor_init`` (dry-run lowering)."""
+    def slot(p):
+        if len(p.shape) >= 2:
+            return _Factored(
+                vr=jax.ShapeDtypeStruct(p.shape[:-1], jnp.float32),
+                vc=jax.ShapeDtypeStruct(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32))
+        return _Full(v=jax.ShapeDtypeStruct(p.shape, jnp.float32))
+    return AfState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                   slots=jax.tree.map(slot, param_shapes,
+                                      is_leaf=lambda x: hasattr(x, "shape")))
+
+
+def adafactor_slot_axes(param_axes) -> AfState:
+    """Logical-axis mirror for sharding the factored state."""
+    def slot(axes):
+        axes = tuple(axes)
+        if len(axes) >= 2:
+            return _Factored(vr=axes[:-1], vc=axes[:-2] + axes[-1:])
+        return _Full(v=axes)
+    return AfState(step=(),
+                   slots=jax.tree.map(slot, param_axes,
+                                      is_leaf=lambda t: isinstance(t, tuple)))
+
+
+def _rms(x: jax.Array) -> jax.Array:
+    return jnp.sqrt(jnp.mean(jnp.square(x)))
+
+
+def adafactor_update(cfg: AdafactorConfig, params, grads, state: AfState,
+                     lr_scale: Any = 1.0) -> Tuple[Any, AfState, jax.Array]:
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    beta2 = 1.0 - t ** (-cfg.decay)
+    lr = cfg.lr * lr_scale
+    from repro.optim.adamw import global_norm
+    gnorm = global_norm(grads)
+
+    def upd(p, g, slot: AfSlot):
+        g32 = g.astype(jnp.float32)
+        g2 = jnp.square(g32) + cfg.eps1
+        if isinstance(slot, _Factored):
+            vr = beta2 * slot.vr + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc = beta2 * slot.vc + (1 - beta2) * jnp.mean(g2, axis=-2)
+            # vhat = vr x vc / mean(vr)  (outer product, factored)
+            denom = jnp.mean(vr, axis=-1, keepdims=True)
+            vhat = (vr / jnp.maximum(denom, cfg.eps1))[..., :, None] \
+                * vc[..., None, :]
+            new_slot: AfSlot = _Factored(vr, vc)
+        else:
+            v = beta2 * slot.v + (1 - beta2) * g2
+            vhat = v
+            new_slot = _Full(v)
+        u = g32 / jnp.sqrt(jnp.maximum(vhat, cfg.eps1))
+        u = u / jnp.maximum(1.0, _rms(u) / cfg.clip_threshold)
+        p32 = p.astype(jnp.float32)
+        scale = lr * jnp.maximum(cfg.eps2, _rms(p32))
+        p32 = p32 - scale * u - lr * cfg.weight_decay * p32
+        return p32.astype(p.dtype), new_slot
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_s = treedef.flatten_up_to(state.slots)
+    out = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+    return (treedef.unflatten([o[0] for o in out]),
+            AfState(step=step,
+                    slots=treedef.unflatten([o[1] for o in out])),
+            gnorm)

@@ -1,0 +1,94 @@
+"""AdamW on pytrees (pure JAX, no optax dependency).
+
+Moments are stored in fp32 regardless of param dtype; the update is
+decoupled weight decay (Loshchilov & Hutter). ``adamw_update`` is pure and
+jit/pjit-friendly; the optimizer state pytree mirrors the param tree so the
+distributed layer can shard it with the same logical-axis rules (ZeRO-1:
+moments sharded over the data axes via the ``opt_state`` rule).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4                 # peak LR if a schedule is applied
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0           # 0 disables
+
+
+class OptState(NamedTuple):
+    step: jax.Array                  # int32 scalar
+    mu: Any                          # first moments (param tree, fp32)
+    nu: Any                          # second moments (param tree, fp32)
+
+
+def adamw_init(params) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return OptState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                    nu=jax.tree.map(jnp.copy, zeros))
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    """(clipped grads, pre-clip norm)."""
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, state: OptState,
+                 lr_scale: jax.Array | float = 1.0
+                 ) -> Tuple[Any, OptState, jax.Array]:
+    """One AdamW step. Returns (new_params, new_state, grad_norm)."""
+    if cfg.grad_clip > 0:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    else:
+        gnorm = global_norm(grads)
+    step = state.step + 1
+    b1t = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2t = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1.0 - cfg.b1) * g32
+        v = cfg.b2 * v + (1.0 - cfg.b2) * jnp.square(g32)
+        mhat = m / b1t
+        vhat = v / b2t
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        p32 = p.astype(jnp.float32)
+        p32 = p32 - lr * (delta + cfg.weight_decay * p32)
+        return p32.astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, v)
+           for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, OptState(step=step, mu=new_m, nu=new_v), gnorm
+
+
+def opt_state_axes(param_axes) -> OptState:
+    """Logical axes for the optimizer state (ZeRO-1 sharding rules)."""
+    return OptState(step=(),
+                    mu=jax.tree.map(lambda a: a, param_axes),
+                    nu=jax.tree.map(lambda a: a, param_axes))

@@ -1,0 +1,31 @@
+"""Learning-rate schedules as pure scalar functions of the step."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+def constant(value: float = 1.0) -> Schedule:
+    return lambda step: jnp.asarray(value, jnp.float32)
+
+
+def cosine_decay(total_steps: int, final_frac: float = 0.1) -> Schedule:
+    def f(step):
+        t = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return final_frac + (1.0 - final_frac) * cos
+    return f
+
+
+def linear_warmup_cosine(warmup_steps: int, total_steps: int,
+                         final_frac: float = 0.1) -> Schedule:
+    cos = cosine_decay(max(total_steps - warmup_steps, 1), final_frac)
+
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = s / jnp.maximum(warmup_steps, 1)
+        return jnp.where(s < warmup_steps, warm, cos(s - warmup_steps))
+    return f

@@ -1,0 +1,3 @@
+from repro.serving.engine import (Request, ServingConfig, ServingEngine)
+
+__all__ = ["Request", "ServingConfig", "ServingEngine"]

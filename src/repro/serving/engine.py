@@ -1,0 +1,190 @@
+"""Batched serving engine: continuous batching + Tally co-location hook.
+
+Slot-based continuous batching (vLLM-style at batch granularity):
+  - a fixed decode batch of ``capacity`` slots over a shared KV cache of
+    ``max_len`` per slot,
+  - arriving requests are prefilled (B=1) and their KV written into a free
+    slot; decode steps run over ALL active slots each iteration with
+    per-slot cache indices,
+  - finished slots (EOS / max_new_tokens) are freed immediately and can be
+    re-admitted within the same decode loop — no head-of-line blocking.
+
+Tally co-location: the engine is the HIGH-PRIORITY client. When the
+request queue is empty and all slots are idle, the engine invokes the
+``best_effort_hook`` (e.g. one budgeted quantum of a co-located training
+job) — the same opportunistic policy as Fig. 4, applied at the engine
+level; the kernel-level path is exercised by ``core.virtualization``.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import TransformerLM, pad_cache
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                    # (S,) int32
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    submit_t: float = field(default_factory=time.monotonic)
+    first_token_t: Optional[float] = None
+    done_t: Optional[float] = None
+    tokens: List[int] = field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return self.done_t is not None
+
+    @property
+    def ttft(self) -> Optional[float]:
+        return (self.first_token_t - self.submit_t
+                if self.first_token_t else None)
+
+    @property
+    def latency(self) -> Optional[float]:
+        return self.done_t - self.submit_t if self.done_t else None
+
+
+@dataclass(frozen=True)
+class ServingConfig:
+    capacity: int = 4                     # decode slots
+    max_len: int = 256                    # per-slot KV capacity
+    greedy: bool = True
+
+
+class ServingEngine:
+    def __init__(self, model: TransformerLM, params, scfg: ServingConfig,
+                 best_effort_hook: Optional[Callable[[], None]] = None):
+        self.model = model
+        self.params = params
+        self.scfg = scfg
+        self.cfg = model.cfg
+        self.queue: Deque[Request] = deque()
+        self.done: List[Request] = []
+        self.be_hook = best_effort_hook
+        self.be_quanta = 0
+        cap, T = scfg.capacity, scfg.max_len
+        self._lengths = np.zeros(cap, np.int32)        # tokens in cache
+        self._active = np.zeros(cap, bool)
+        self._slot_req: List[Optional[Request]] = [None] * cap
+        self._next_tok = np.zeros(cap, np.int32)
+        self.cache = self._empty_cache()
+        self._decode = jax.jit(self._decode_impl)
+        self._prefill = jax.jit(self.model.prefill)
+
+    # -- cache plumbing --------------------------------------------------------
+
+    def _empty_cache(self) -> Dict[str, jax.Array]:
+        from repro.configs.base import kv_cache_specs
+        specs = kv_cache_specs(self.cfg, self.scfg.capacity,
+                               self.scfg.max_len)
+        return {k: jnp.zeros(s.shape, s.dtype) for k, s in specs.items()}
+
+    def _insert_slot(self, slot: int, req_cache: Dict[str, jax.Array]
+                     ) -> None:
+        """Write a prefilled (B=1) cache into slot `slot`."""
+        full = pad_cache(req_cache, self.scfg.max_len)
+        for key, arr in full.items():
+            tgt = self.cache[key]
+            idx = (0, slot) + (0,) * (arr.ndim - 2)
+            self.cache[key] = jax.lax.dynamic_update_slice(
+                tgt, arr.astype(tgt.dtype), idx)
+
+    def _decode_impl(self, params, tokens, cache, lengths):
+        logits, new_cache = self.model.decode_step(
+            params, tokens, cache, lengths)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_tok, new_cache
+
+    # -- public API --------------------------------------------------------------
+
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
+               eos_id: Optional[int] = None) -> Request:
+        req = Request(rid=len(self.done) + len(self.queue),
+                      prompt=np.asarray(prompt, np.int32),
+                      max_new_tokens=max_new_tokens, eos_id=eos_id)
+        self.queue.append(req)
+        return req
+
+    @property
+    def n_active(self) -> int:
+        return int(self._active.sum())
+
+    def _admit(self) -> bool:
+        if not self.queue:
+            return False
+        free = np.flatnonzero(~self._active)
+        if len(free) == 0:
+            return False
+        slot = int(free[0])
+        req = self.queue.popleft()
+        toks = jnp.asarray(req.prompt[None, :])
+        logits, cache = self._prefill(self.params, toks)
+        self._insert_slot(slot, cache)
+        first = int(jnp.argmax(logits[0, -1]))
+        req.tokens.append(first)
+        req.first_token_t = time.monotonic()
+        self._slot_req[slot] = req
+        self._lengths[slot] = len(req.prompt)
+        self._next_tok[slot] = first
+        self._active[slot] = True
+        return True
+
+    def _retire(self, slot: int) -> None:
+        req = self._slot_req[slot]
+        assert req is not None
+        req.done_t = time.monotonic()
+        self.done.append(req)
+        self._slot_req[slot] = None
+        self._active[slot] = False
+        self._lengths[slot] = 0
+
+    def step(self) -> bool:
+        """One engine iteration. Returns True if any work was done."""
+        # admit as many as possible (priority: serving work first)
+        admitted = False
+        while self._admit():
+            admitted = True
+        if not self._active.any():
+            if admitted:
+                return True
+            if self.be_hook is not None:
+                # opportunistic best-effort quantum (Fig. 4 policy at the
+                # engine level): only when the HP engine is fully idle
+                self.be_hook()
+                self.be_quanta += 1
+                return True
+            return False
+        tokens = jnp.asarray(self._next_tok[:, None])
+        lengths = jnp.asarray(self._lengths)
+        next_tok, self.cache = self._decode(self.params, tokens,
+                                            self.cache, lengths)
+        next_np = np.asarray(next_tok)
+        for slot in np.flatnonzero(self._active):
+            req = self._slot_req[slot]
+            tok = int(next_np[slot])
+            req.tokens.append(tok)
+            self._lengths[slot] += 1
+            self._next_tok[slot] = tok
+            hit_eos = req.eos_id is not None and tok == req.eos_id
+            out_of_room = self._lengths[slot] + 1 >= self.scfg.max_len
+            if (len(req.tokens) >= req.max_new_tokens or hit_eos
+                    or out_of_room):
+                self._retire(slot)
+        return True
+
+    def run_until_idle(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if not self.queue and not self._active.any():
+                return
+            self.step()

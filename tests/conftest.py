@@ -1,0 +1,28 @@
+"""Shared fixtures. NB: XLA_FLAGS host-device-count is deliberately NOT set
+here — smoke tests and benches see 1 device; only launch/dryrun.py forces 512.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def reduced(name: str, **overrides):
+    cfg = get_config(name).reduced()
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+@pytest.fixture(scope="session")
+def make_reduced():
+    return reduced

@@ -1,0 +1,140 @@
+"""Per-architecture smoke tests on reduced configs (CPU, 1 device).
+
+For every assigned arch: one forward/train step asserting output shapes and
+no NaNs, a decode step against a zeroed cache, and (separately) cache
+consistency: prefill + decode must reproduce the full-sequence logits.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import (SHAPES, all_arch_names, get_config, input_specs,
+                           kv_cache_specs, shape_applicable)
+from repro.models.transformer import build_model, loss_fn, pad_cache
+
+ARCHS = all_arch_names()
+
+
+def _batch(cfg, rng, B=2, S=16):
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, size=(B, S)),
+                         jnp.int32)
+    batch = {"tokens": tokens, "targets": tokens}
+    if cfg.encoder_layers:
+        batch["encoder_embeds"] = jnp.asarray(
+            rng.normal(size=(B, cfg.num_audio_frames, cfg.d_model)),
+            cfg.dtype)
+    if cfg.mrope_sections is not None:
+        batch["positions"] = jnp.broadcast_to(
+            jnp.arange(S, dtype=jnp.int32), (3, B, S))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_grad(arch, rng):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, rng)
+
+    loss, metrics = loss_fn(model, params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), f"{arch}: non-finite loss"
+    # loss should start near ln(V) for random params
+    assert abs(float(loss) - np.log(cfg.vocab_size)) < 2.0
+
+    grads = jax.grad(lambda p: loss_fn(model, p, batch)[0])(params)
+    gnorm = sum(float(jnp.sum(jnp.square(g)))
+                for g in jax.tree.leaves(grads)) ** 0.5
+    assert np.isfinite(gnorm) and gnorm > 0, f"{arch}: bad grad norm {gnorm}"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_step(arch, rng):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, T = 2, 32
+    cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                         kv_cache_specs(cfg, B, T))
+    tok = jnp.zeros((B, 1), jnp.int32)
+    kw = {}
+    if cfg.mrope_sections is not None:
+        kw["positions"] = jnp.zeros((3, B, 1), jnp.int32)
+    logits, new_cache = model.decode_step(params, tok, cache, jnp.int32(0),
+                                          **kw)
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    # cache trees keep their structure and shapes
+    assert jax.tree.structure(new_cache) == jax.tree.structure(cache)
+    for a, b in zip(jax.tree.leaves(new_cache), jax.tree.leaves(cache)):
+        assert a.shape == b.shape
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_consistency(arch, rng):
+    """prefill(S-1) + decode(token S-1) == forward(S) at the last position."""
+    cfg = get_config(arch).reduced()
+    over = {"dtype": jnp.float32}
+    if cfg.moe is not None:   # disable capacity dropping (S-dependent)
+        over["moe"] = dataclasses.replace(cfg.moe, capacity_factor=16.0)
+    cfg = dataclasses.replace(cfg, **over)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 12
+    batch = _batch(cfg, rng, B, S)
+    tokens = batch["tokens"]
+
+    kw_full = {k: batch[k] for k in ("encoder_embeds", "positions")
+               if k in batch}
+    logits_full, _ = model.forward_train(params, tokens, **kw_full)
+
+    kw_pre = dict(kw_full)
+    if "positions" in kw_pre:
+        kw_pre["positions"] = kw_pre["positions"][..., :S - 1]
+    lg_pre, cache = model.prefill(params, tokens[:, :S - 1], **kw_pre)
+    np.testing.assert_allclose(np.asarray(lg_pre[:, 0]),
+                               np.asarray(logits_full[:, S - 2]),
+                               rtol=2e-4, atol=2e-4)
+
+    cache = pad_cache(cache, S + 4)
+    kw_dec = {}
+    if "positions" in kw_full:
+        kw_dec["positions"] = jnp.full((3, B, 1), S - 1, jnp.int32)
+    lg_dec, _ = model.decode_step(params, tokens[:, S - 1:S],
+                                  cache, jnp.int32(S - 1), **kw_dec)
+    np.testing.assert_allclose(np.asarray(lg_dec[:, 0]),
+                               np.asarray(logits_full[:, S - 1]),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_input_specs_all_cells(arch):
+    """input_specs produces well-formed ShapeDtypeStructs for every cell."""
+    cfg = get_config(arch)
+    for shape in SHAPES.values():
+        ok, why = shape_applicable(cfg, shape)
+        if not ok:
+            assert "skip" in why
+            continue
+        specs = input_specs(cfg, shape)
+        assert "tokens" in specs
+        for leaf in jax.tree.leaves(specs):
+            assert isinstance(leaf, jax.ShapeDtypeStruct)
+            assert 0 not in leaf.shape
+
+
+def test_param_counts_match_configs():
+    """Declared param trees agree with the analytic param_count()."""
+    from repro.models.common import param_count_tree, shapes_from_specs
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        model = build_model(cfg)
+        shapes = model.param_shapes()
+        n_tree = sum(int(np.prod(s.shape))
+                     for s in jax.tree.leaves(shapes))
+        n_analytic = cfg.param_count()
+        rel = abs(n_tree - n_analytic) / max(n_tree, 1)
+        assert rel < 0.05, (arch, n_tree, n_analytic, rel)

@@ -1,0 +1,79 @@
+"""Fault tolerance: heartbeats, stragglers, elastic re-mesh, recovery."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.distributed.fault_tolerance import (HeartbeatMonitor,
+                                               RecoveryAction,
+                                               StragglerDetector,
+                                               decide_recovery,
+                                               plan_elastic_remesh)
+
+
+def test_heartbeat_detects_dead():
+    hb = HeartbeatMonitor(timeout=5.0)
+    hb.beat(0, 0.0)
+    hb.beat(1, 0.0)
+    hb.beat(0, 8.0)
+    assert hb.dead_hosts(10.0) == [1]
+    assert hb.alive_hosts(10.0) == [0]
+
+
+def test_straggler_detection():
+    sd = StragglerDetector(window=4, ratio=1.5)
+    for step in range(6):
+        for h in range(4):
+            sd.record(h, 1.0 if h != 2 else 2.5)
+    assert sd.stragglers() == [2]
+
+
+def test_straggler_robust_to_single_slow_step():
+    sd = StragglerDetector(window=8, ratio=1.5)
+    for step in range(8):
+        for h in range(4):
+            t = 1.0
+            if h == 1 and step == 3:
+                t = 30.0            # one GC pause, not a straggler
+            sd.record(h, t)
+    assert sd.stragglers() == []
+
+
+def test_elastic_remesh_preserves_model_axis():
+    plan = plan_elastic_remesh(
+        mesh_shape=(2, 16, 16), axis_names=("pod", "data", "model"),
+        hosts=list(range(128)), dead=[5], devices_per_host=4,
+        global_batch=256)
+    assert plan.new_mesh_shape[2] == 16        # model axis intact
+    assert plan.new_mesh_shape[0] * plan.new_mesh_shape[1] < 32
+    assert plan.new_global_batch < 256
+    assert 5 in plan.dropped_hosts
+
+
+@given(n_dead=st.integers(1, 60))
+@settings(max_examples=20, deadline=None)
+def test_elastic_remesh_fits_survivors(n_dead):
+    hosts = list(range(64))
+    plan = plan_elastic_remesh(
+        (16, 16), ("data", "model"), hosts, hosts[:n_dead],
+        devices_per_host=4, global_batch=256)
+    import math
+    assert math.prod(plan.new_mesh_shape) <= (64 - n_dead) * 4
+    assert plan.new_mesh_shape[1] == 16
+
+
+def test_remesh_impossible_raises():
+    with pytest.raises(RuntimeError):
+        plan_elastic_remesh((16, 16), ("data", "model"),
+                            hosts=[0, 1], dead=[0, 1],
+                            devices_per_host=4, global_batch=64)
+
+
+def test_decide_recovery_policies():
+    assert decide_recovery([], [], latest_ckpt=5).kind == "none"
+    assert decide_recovery([3], [], latest_ckpt=5,
+                           spare_hosts=2).kind == "restart"
+    assert decide_recovery([3], [], latest_ckpt=5,
+                           spare_hosts=0).kind == "remesh"
+    with pytest.raises(RuntimeError):
+        decide_recovery([3], [], latest_ckpt=None)
+    assert decide_recovery([], [7], latest_ckpt=5,
+                           spare_hosts=0).kind == "none"

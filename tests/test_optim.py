@@ -1,0 +1,89 @@
+"""Optimizers: AdamW + Adafactor convergence, clipping, schedules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import (AdamWConfig, adamw_init, adamw_update,
+                         clip_by_global_norm, global_norm,
+                         linear_warmup_cosine)
+from repro.optim.adafactor import (AdafactorConfig, adafactor_init,
+                                   adafactor_slot_shapes, adafactor_update)
+
+
+def _quadratic(params):
+    return sum(jnp.sum(jnp.square(p - 3.0)) for p in jax.tree.leaves(params))
+
+
+def test_adamw_converges_quadratic():
+    params = {"w": jnp.zeros((4, 4)), "b": jnp.zeros((4,))}
+    state = adamw_init(params)
+    cfg = AdamWConfig(lr=0.3, weight_decay=0.0)
+    for _ in range(200):
+        grads = jax.grad(_quadratic)(params)
+        params, state, _ = adamw_update(cfg, params, grads, state)
+    assert _quadratic(params) < 1e-2
+
+
+def test_adafactor_converges_quadratic():
+    params = {"w": jnp.zeros((8, 4)), "b": jnp.zeros((4,))}
+    state = adafactor_init(params)
+    cfg = AdafactorConfig(lr=0.3)
+    for _ in range(300):
+        grads = jax.grad(_quadratic)(params)
+        params, state, _ = adafactor_update(cfg, params, grads, state)
+    assert _quadratic(params) < 1e-1
+
+
+def test_adafactor_state_is_factored():
+    params = {"w": jnp.zeros((64, 32)), "stack": jnp.zeros((4, 16, 8))}
+    state = adafactor_init(params)
+    assert state.slots["w"].vr.shape == (64,)
+    assert state.slots["w"].vc.shape == (32,)
+    assert state.slots["stack"].vr.shape == (4, 16)
+    assert state.slots["stack"].vc.shape == (4, 8)
+    # memory: factored state is tiny vs adamw's 2x params
+    n_params = 64 * 32 + 4 * 16 * 8
+    n_state = sum(x.size for x in jax.tree.leaves(state.slots))
+    assert n_state < 0.2 * n_params
+
+
+def test_adafactor_slot_shapes_match_init():
+    params = {"w": jnp.zeros((6, 5)), "b": jnp.zeros((7,))}
+    shapes = adafactor_slot_shapes(jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), params))
+    state = adafactor_init(params)
+    got = jax.tree.map(lambda s: s.shape, shapes.slots)
+    want = jax.tree.map(lambda s: s.shape, state.slots)
+    assert got == want
+
+
+@given(scale=st.floats(0.1, 100.0))
+@settings(max_examples=20, deadline=None)
+def test_clip_by_global_norm_property(scale):
+    g = {"a": jnp.ones((3, 3)) * scale, "b": jnp.ones((2,)) * scale}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    got = float(global_norm(clipped))
+    assert got <= 1.0 + 1e-4
+    if float(norm) <= 1.0:      # small grads untouched
+        np.testing.assert_allclose(clipped["a"], g["a"], rtol=1e-6)
+
+
+def test_warmup_cosine_shape():
+    sched = linear_warmup_cosine(10, 100)
+    s0 = float(sched(jnp.asarray(0)))
+    s10 = float(sched(jnp.asarray(10)))
+    s100 = float(sched(jnp.asarray(100)))
+    assert s0 == pytest.approx(0.0)
+    assert s10 == pytest.approx(1.0)
+    assert 0.0 < s100 < 0.2
+
+
+def test_adamw_moments_fp32_under_bf16_params():
+    params = {"w": jnp.zeros((4, 4), jnp.bfloat16)}
+    state = adamw_init(params)
+    assert state.mu["w"].dtype == jnp.float32
+    grads = {"w": jnp.ones((4, 4), jnp.bfloat16)}
+    new_p, state, _ = adamw_update(AdamWConfig(), params, grads, state)
+    assert new_p["w"].dtype == jnp.bfloat16
