@@ -2,16 +2,13 @@
 from __future__ import annotations
 
 import json
-import time
 from pathlib import Path
 from typing import Dict, List, Optional, Sequence
-
-import numpy as np
 
 from repro.core.device_model import A100
 from repro.core.simulator import run_policy
 from repro.core.traffic import maf2_like_trace, scale_to_load
-from repro.core.workloads import (INFER_NAMES, TRAIN_NAMES, isolated_time,
+from repro.core.workloads import (isolated_time,
                                   paper_workload)
 
 RESULTS = Path(__file__).parent / "results"

@@ -9,9 +9,7 @@ Results are cached per (hp, be, policy) so interrupted sweeps resume.
 from __future__ import annotations
 
 import argparse
-import json
 import time
-from pathlib import Path
 
 import numpy as np
 

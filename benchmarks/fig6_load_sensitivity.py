@@ -8,13 +8,9 @@ real-time p99 and best-effort throughput under every policy.
 from __future__ import annotations
 
 import argparse
-import json
-from pathlib import Path
-
-import numpy as np
 
 from repro.core.device_model import A100
-from repro.core.simulator import run_policy, simulate
+from repro.core.simulator import run_policy
 from repro.core.traffic import condensed_timeseries, maf2_like_trace, \
     scale_to_load
 from repro.core.workloads import isolated_time, paper_workload

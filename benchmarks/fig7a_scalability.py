@@ -10,11 +10,9 @@ from __future__ import annotations
 import argparse
 import dataclasses
 
-import numpy as np
-
 from repro.core.device_model import A100
 from repro.core.simulator import run_policy
-from repro.core.workloads import isolated_time, paper_workload
+from repro.core.workloads import paper_workload
 from benchmarks.common import RESULTS, cached, fmt_table, make_trace
 
 OUT = RESULTS / "fig7a.json"

@@ -1,0 +1,138 @@
+"""Fig. 8 (ours): cluster-scale fleet sweep — fleet size x job mix x
+placement policy.
+
+The paper stops at one GPU; this benchmark runs the fleet simulator
+(``core.fleet``) over multi-GPU scenarios and reports, per configuration:
+cluster goodput (sum of normalized SLO-good HP completions + normalized BE
+throughput), per-service p99, migrations, and GPU-hours saved against a
+dedicated-GPU-per-job baseline.
+
+Also asserts the fleet's simulator contract: a 1-GPU fleet reproduces the
+single-GPU simulator's schedule exactly.
+
+    PYTHONPATH=src python -m benchmarks.fig8_fleet            # 4 GPU, 8 jobs
+    PYTHONPATH=src python -m benchmarks.fig8_fleet --full     # + 8 GPU sweep
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.device_model import A100
+from repro.core.fleet import FleetSimulator, JobSpec, be_job, hp_service
+from repro.core.placement import PLACEMENT_POLICIES
+from repro.core.simulator import simulate
+from repro.core.traffic import maf2_like_trace, scale_to_load
+from repro.core.workloads import isolated_time, paper_workload
+from benchmarks.common import RESULTS, cached, fmt_table
+
+# job mixes: (hp service models, be training models); jobs arrive staggered
+MIXES = {
+    "balanced": (["resnet50-infer", "bert-infer"] * 2,
+                 ["gpt2-train", "bert-train", "pegasus-train",
+                  "pointnet-train"]),
+    "hp_heavy": (["resnet50-infer", "bert-infer", "resnet50-infer",
+                  "bert-infer", "resnet50-infer"],
+                 ["gpt2-train", "bert-train", "pegasus-train"]),
+    "be_heavy": (["bert-infer", "resnet50-infer"],
+                 ["gpt2-train", "bert-train", "pegasus-train",
+                  "pointnet-train", "gpt2-train", "bert-train"]),
+}
+
+
+def build_jobs(mix: str, horizon: float) -> List[JobSpec]:
+    hp_names, be_names = MIXES[mix]
+    jobs: List[JobSpec] = []
+    # tight SLO (5% over isolated p99) so the BE-migration path is visible
+    for i, name in enumerate(hp_names):
+        jobs.append(hp_service(
+            f"svc{i}-{name}", paper_workload(name, 0),
+            arrival=i * horizon / 16, load=0.3 + 0.1 * (i % 3),
+            seed=10 + i, slo_factor=1.05))
+    for i, name in enumerate(be_names):
+        jobs.append(be_job(f"be{i}-{name}", paper_workload(name, 1),
+                           arrival=i * horizon / 12))
+    return jobs
+
+
+def run_scenario(n_gpus: int, mix: str, policy: str,
+                 horizon: float) -> Dict[str, float]:
+    fleet = FleetSimulator(n_gpus, policy, horizon=horizon,
+                           check_interval=horizon / 10, min_window=15)
+    res = fleet.run(build_jobs(mix, horizon))
+    p99s = [s.p99 for s in res.services.values() if np.isfinite(s.p99)]
+    slos = [s.slo_attainment for s in res.services.values()
+            if s.device is not None]
+    return {
+        "gpus": n_gpus, "mix": mix, "policy": policy,
+        "goodput": res.cluster_goodput,
+        "goodput_per_gpu": res.goodput_per_gpu,
+        "worst_p99_ms": max(p99s) * 1e3 if p99s else float("nan"),
+        "mean_slo_att": float(np.mean(slos)) if slos else 0.0,
+        "migrations": len(res.migrations),
+        "unplaced": len(res.unplaced),
+        "gpu_hours_saved": res.gpu_hours_saved,
+    }
+
+
+def check_single_device_contract() -> None:
+    """1-GPU fleet == single-GPU simulator, event for event."""
+    hp = paper_workload("resnet50-infer", 0)
+    be = paper_workload("gpt2-train", 1)
+    dur = 10.0
+    base = maf2_like_trace(duration=dur, mean_rate=20.0, burstiness=1.3,
+                           level_period=2.0, seed=3)
+    trace = scale_to_load(base, isolated_time(hp, A100), 0.5)
+    ref = simulate("tally", hp, [be], trace, A100, duration=dur)
+    fleet = FleetSimulator(1, "first_fit", horizon=dur)
+    fleet.run([hp_service("svc", hp, trace=trace, slo_factor=100.0),
+               be_job("gpt2-train", be)])
+    book = fleet.devices[0].engine.book
+    assert np.array_equal(np.asarray(ref.latency.latencies),
+                          np.asarray(book.latency.latencies))
+    assert book.be_tput["gpt2-train"].samples == \
+        ref.be_tput["gpt2-train"].samples
+    print("single-device contract: 1-GPU fleet == simulate('tally')  [OK]")
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="add the 8-GPU tier (slower)")
+    ap.add_argument("--refresh", action="store_true")
+    ap.add_argument("--horizon", type=float, default=24.0)
+    args = ap.parse_args(argv)
+
+    t0 = time.time()
+    check_single_device_contract()
+    sizes = (2, 4, 8) if args.full else (2, 4)
+
+    def compute():
+        rows = []
+        for n in sizes:
+            for mix in MIXES:
+                for pol in PLACEMENT_POLICIES:
+                    rows.append(run_scenario(n, mix, pol, args.horizon))
+        return rows
+
+    tag = "full" if args.full else "quick"
+    rows = cached(RESULTS / f"fig8_fleet_{tag}.json", compute,
+                  refresh=args.refresh)
+
+    print("\n== Fig. 8: fleet size x job mix x placement policy ==")
+    print(fmt_table(rows, ("gpus", "mix", "policy", "goodput",
+                           "goodput_per_gpu", "worst_p99_ms",
+                           "mean_slo_att", "migrations", "unplaced",
+                           "gpu_hours_saved"), floatfmt="{:.3f}"))
+    best = max(rows, key=lambda r: r["goodput_per_gpu"])
+    print(f"\nbest goodput/GPU: {best['policy']} on {best['mix']} "
+          f"@ {best['gpus']} GPUs ({best['goodput_per_gpu']:.2f})")
+    print(f"total: {time.time() - t0:.0f}s")
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    main()

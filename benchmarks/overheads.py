@@ -17,10 +17,10 @@ import numpy as np
 
 from repro.core.device_model import A100
 from repro.core.descriptor import build_plain
-from repro.core.profiler import TransparentProfiler, candidate_configs
+from repro.core.profiler import TransparentProfiler
 from repro.core.simulator import make_measure, price_launch
 from repro.core.workloads import TRAIN_NAMES, paper_workload
-from benchmarks.common import RESULTS, cached, fmt_table
+from benchmarks.common import RESULTS, cached
 
 
 def virtualization_overhead() -> dict:

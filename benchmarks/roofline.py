@@ -18,10 +18,6 @@ from __future__ import annotations
 
 import argparse
 import json
-from pathlib import Path
-
-import numpy as np
-
 from benchmarks.common import RESULTS, fmt_table
 
 DRY = RESULTS / "dryrun"

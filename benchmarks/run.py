@@ -1,7 +1,8 @@
 """Benchmark orchestrator: one module per paper table/figure.
 
-``python -m benchmarks.run``          quick pass over every benchmark
-``python -m benchmarks.run --full``   full grids (hours; results cached)
+``python -m benchmarks.run``            quick pass over every benchmark
+``python -m benchmarks.run --full``     full grids (hours; results cached)
+``python -m benchmarks.run --dry-run``  import + enumerate only (CI smoke)
 
 Individual benchmarks: ``python -m benchmarks.<name>`` — see the table in
 DESIGN.md §6. Roofline reads the dry-run artifacts (run
@@ -17,14 +18,36 @@ import time
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="import every benchmark module and list the plan "
+                         "without running anything (CI smoke check)")
     args = ap.parse_args(argv)
     quick = not args.full
     t0 = time.time()
 
     from benchmarks import (fig5_end_to_end, fig6_load_sensitivity,
                             fig7a_scalability, fig7b_decomposition,
-                            fig7c_threshold, overheads, roofline,
-                            table1_turnaround)
+                            fig7c_threshold, fig8_fleet, overheads,
+                            roofline, table1_turnaround)
+
+    plan = [
+        (fig5_end_to_end.main, ["--quick"] if quick else []),
+        (fig6_load_sensitivity.main, ["--quick"] if quick else []),
+        (fig6_load_sensitivity.main, ["--timeseries"]),
+        (fig7a_scalability.main, []),
+        (fig7b_decomposition.main, []),
+        (fig7c_threshold.main, ["--quick"] if quick else []),
+        (fig8_fleet.main, [] if quick else ["--full"]),
+        (overheads.main, []),
+    ]
+
+    if args.dry_run:
+        print("# dry run: all benchmark modules imported OK; plan:")
+        print("  benchmarks.table1_turnaround.main()")
+        for fn, fargs in plan:
+            print(f"  {fn.__module__}.main({fargs})")
+        print("  benchmarks.roofline.main([])  (needs dry-run artifacts)")
+        return 0
 
     print("#" * 70)
     print("# Tally-on-TPU benchmark suite (cached results reused; use")
@@ -32,13 +55,8 @@ def main(argv=None) -> int:
     print("#" * 70)
 
     table1_turnaround.main()
-    fig5_end_to_end.main(["--quick"] if quick else [])
-    fig6_load_sensitivity.main(["--quick"] if quick else [])
-    fig6_load_sensitivity.main(["--timeseries"])
-    fig7a_scalability.main([])
-    fig7b_decomposition.main([])
-    fig7c_threshold.main(["--quick"] if quick else [])
-    overheads.main([])
+    for fn, fargs in plan:
+        fn(fargs)
     try:
         roofline.main([])
     except Exception as e:                     # noqa: BLE001

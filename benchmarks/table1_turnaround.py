@@ -8,7 +8,6 @@ reported as n/a with the paper's value for reference (DESIGN.md §2).
 """
 from __future__ import annotations
 
-import json
 
 import numpy as np
 

@@ -8,7 +8,6 @@ immediately. Results are bit-compatible with direct execution.
     PYTHONPATH=src python examples/quickstart.py
 """
 import sys
-import time
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).parent.parent / "src"))

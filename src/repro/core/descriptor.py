@@ -21,11 +21,10 @@ tuple of grid indices. Bodies must index through ``pids`` — never
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 

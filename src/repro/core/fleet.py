@@ -1,0 +1,516 @@
+"""Cluster-scale fleet simulator: multi-GPU placement + admission (Tally
+at the scale of the clusters that motivate it).
+
+The paper evaluates isolation on one GPU; the underutilization it attacks
+is a *cluster* phenomenon (Jeon et al., arXiv:1901.05758). This layer
+instantiates N independent ``DeviceEngine``s — each a full single-GPU Tally
+stack (scheduler + transparent profiler + device-model pricing) — behind an
+admission + placement controller:
+
+  - **Jobs arrive over time.** An ``hp_service`` job is a latency-critical
+    inference service driven by MAF2-style bursty traffic
+    (``traffic.maf2_like_trace`` scaled to a target load); a ``be_train``
+    job is an opportunistic best-effort training job.
+  - **Admission**: a job waits in a FIFO queue until a feasible device
+    exists (at most one HP service per device, at most ``max_be_per_device``
+    BE clients per device). HP services are admitted before BE jobs.
+  - **Placement**: pluggable policies (``core.placement``) choose the
+    device: first-fit, least-loaded-by-HP-occupancy, or interference-aware
+    (profiler-backed turnaround estimates).
+  - **BE migration**: each HP service carries an SLO — p99 within
+    ``slo_factor`` x its isolated p99. At every fleet decision point the
+    controller computes the service's p99 over the requests completed since
+    the previous check; on violation, the most disruptive resident BE job
+    (highest profiled turnaround) is migrated to another device, carrying
+    its block watermark (``BEProgress``) so no completed work is lost.
+
+All devices advance in lockstep between *decision points* (job arrivals,
+periodic SLO checks). Between decision points each device runs its own
+discrete-event loop, so a 1-GPU fleet with everything resident at t=0
+reproduces ``simulate("tally", ...)`` event-for-event (guarded by
+``tests/test_fleet.py::test_single_device_equivalence``).
+
+Fleet-level aggregates:
+  cluster goodput    sum over jobs of normalized *useful* throughput —
+                     HP: SLO-attaining completions / isolated completions,
+                     BE: samples/s / isolated samples/s
+  per-service p99    end-to-end request latency per HP service
+  gpu_hours_saved    GPU-time of the dedicated-GPU baseline (one GPU per
+                     placed job for its active span) minus the fleet's
+                     N x horizon, in hours
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional, Tuple, Union
+
+from repro.core.device_model import A100, DeviceModel
+from repro.core.metrics import p99 as _p99
+from repro.core.placement import (DeviceView, PlacementPolicy,
+                                  TurnaroundEstimator, get_policy)
+from repro.core.simulator import DeviceEngine, simulate
+from repro.core.traffic import TrafficTrace, maf2_like_trace, scale_to_load
+from repro.core.workloads import Workload, isolated_time
+
+JOB_KINDS = ("hp_service", "be_train")
+
+
+# ---------------------------------------------------------------------------
+# Job specifications
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class JobSpec:
+    """One job submitted to the fleet.
+
+    ``hp_service``: an inference service; ``load`` and ``seed`` parameterize
+    its MAF2-style traffic unless an explicit ``trace`` is given (trace
+    times are relative to placement). ``be_train``: a best-effort training
+    job; ``duration`` optionally bounds its active span (departure).
+    """
+
+    name: str
+    kind: str                          # "hp_service" | "be_train"
+    workload: Workload
+    arrival: float = 0.0
+    load: float = 0.5                  # HP: target busy fraction
+    seed: int = 0                      # HP: traffic seed
+    slo_factor: float = 2.0            # HP: p99 SLO = factor x isolated p99
+    trace: Optional[TrafficTrace] = None
+    duration: Optional[float] = None   # BE: active span (None = to horizon)
+
+    def __post_init__(self) -> None:
+        if self.kind not in JOB_KINDS:
+            raise ValueError(f"unknown job kind {self.kind!r}; "
+                             f"known: {JOB_KINDS}")
+
+
+def hp_service(name: str, workload: Workload, *, arrival: float = 0.0,
+               load: float = 0.5, seed: int = 0, slo_factor: float = 2.0,
+               trace: Optional[TrafficTrace] = None) -> JobSpec:
+    return JobSpec(name=name, kind="hp_service", workload=workload,
+                   arrival=arrival, load=load, seed=seed,
+                   slo_factor=slo_factor, trace=trace)
+
+
+def be_job(name: str, workload: Workload, *, arrival: float = 0.0,
+           duration: Optional[float] = None) -> JobSpec:
+    return JobSpec(name=name, kind="be_train", workload=workload,
+                   arrival=arrival, duration=duration)
+
+
+# ---------------------------------------------------------------------------
+# Per-device fleet state
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class _IsoRef:
+    """Isolated-execution reference for one HP service (same trace, empty
+    device) — the normalization anchor for SLO and goodput."""
+
+    p99: float
+    count: int
+
+
+class ManagedDevice:
+    """A ``DeviceEngine`` plus the fleet controller's view of it."""
+
+    def __init__(self, index: int, engine: DeviceEngine):
+        self.index = index
+        self.engine = engine
+        self.hp_job: Optional[JobSpec] = None
+        self.hp_placed_at = 0.0
+        self.be_jobs: Dict[str, JobSpec] = {}
+        self.be_placed_at: Dict[str, float] = {}
+        self.lat_seen = 0              # watermark into book latencies
+        self.iso: Optional[_IsoRef] = None
+
+    @property
+    def dev(self) -> DeviceModel:
+        return self.engine.dev
+
+    def occupancy(self, now: float, warmup: float) -> float:
+        """HP busy fraction: measured (since attach) once the service has
+        run a while, declared target load before that (cold-start prior)."""
+        if self.hp_job is None:
+            return 0.0
+        if now - self.hp_placed_at >= warmup:
+            return self.engine.hp_busy_fraction(since=self.hp_placed_at)
+        return self.hp_job.load
+
+    def window_latencies(self, min_window: int) -> List[float]:
+        """Latencies recorded since the last *consumed* SLO window. A
+        window below ``min_window`` is left to accumulate (low-rate
+        services still reach a checkable window eventually) — the
+        watermark only advances once the window is actually evaluated."""
+        lats = self.engine.book.latency.latencies
+        window = lats[self.lat_seen:]
+        if len(window) >= min_window:
+            self.lat_seen = len(lats)
+        return window
+
+
+# ---------------------------------------------------------------------------
+# Results
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ServiceReport:
+    """Outcome of one HP inference service."""
+
+    name: str
+    device: Optional[int]              # None = never admitted
+    placed_at: float = float("nan")
+    requests_done: int = 0
+    p99: float = float("nan")
+    ideal_p99: float = float("nan")
+    slo_factor: float = 2.0
+    slo_attainment: float = 0.0        # fraction of requests within SLO
+    norm_goodput: float = 0.0          # SLO-good completions / isolated
+    active_span: float = 0.0           # seconds the service was resident
+
+    @property
+    def p99_overhead(self) -> float:
+        return self.p99 / self.ideal_p99 - 1.0
+
+
+@dataclass
+class BEReport:
+    """Outcome of one best-effort training job."""
+
+    name: str
+    device: Optional[int]              # final device (None = never admitted)
+    placed_at: float = float("nan")
+    samples: float = 0.0
+    rate: float = 0.0
+    norm_tput: float = 0.0
+    migrations: int = 0
+    active_span: float = 0.0           # seconds the job was resident
+
+
+@dataclass
+class Migration:
+    time: float
+    job: str
+    src: int
+    dst: int
+
+
+@dataclass
+class FleetResult:
+    n_devices: int
+    horizon: float
+    policy: str
+    services: Dict[str, ServiceReport] = field(default_factory=dict)
+    be_jobs: Dict[str, BEReport] = field(default_factory=dict)
+    migrations: List[Migration] = field(default_factory=list)
+    unplaced: List[str] = field(default_factory=list)
+    placements: List[Tuple[float, str, int]] = field(default_factory=list)
+
+    @property
+    def cluster_goodput(self) -> float:
+        return (sum(s.norm_goodput for s in self.services.values())
+                + sum(b.norm_tput for b in self.be_jobs.values()))
+
+    @property
+    def goodput_per_gpu(self) -> float:
+        return self.cluster_goodput / self.n_devices if self.n_devices else 0.0
+
+    @property
+    def gpu_hours_saved(self) -> float:
+        """Dedicated-GPU baseline GPU-time minus the fleet's, in hours."""
+        dedicated = sum(
+            rep.active_span
+            for rep in list(self.services.values())
+            + list(self.be_jobs.values())
+            if rep.device is not None)
+        return (dedicated - self.n_devices * self.horizon) / 3600.0
+
+    def summary(self) -> Dict[str, float]:
+        out = {
+            "cluster_goodput": self.cluster_goodput,
+            "goodput_per_gpu": self.goodput_per_gpu,
+            "gpu_hours_saved": self.gpu_hours_saved,
+            "migrations": float(len(self.migrations)),
+            "unplaced_jobs": float(len(self.unplaced)),
+        }
+        for name, s in self.services.items():
+            out[f"p99_ms/{name}"] = s.p99 * 1e3
+            out[f"slo_attainment/{name}"] = s.slo_attainment
+        for name, b in self.be_jobs.items():
+            out[f"be_norm_tput/{name}"] = b.norm_tput
+        return out
+
+
+# ---------------------------------------------------------------------------
+# The fleet simulator
+# ---------------------------------------------------------------------------
+
+
+class FleetSimulator:
+    """N Tally-scheduled GPUs behind an admission + placement controller."""
+
+    def __init__(self, n_devices: int,
+                 policy: Union[str, PlacementPolicy] = "least_loaded", *,
+                 dev: DeviceModel = A100,
+                 device_models: Optional[List[DeviceModel]] = None,
+                 horizon: float = 60.0, check_interval: float = 5.0,
+                 threshold: float = 0.0316e-3, max_be_per_device: int = 4,
+                 min_window: int = 20):
+        if device_models is not None and len(device_models) != n_devices:
+            raise ValueError("device_models length must equal n_devices")
+        models = device_models or [dev] * n_devices
+        if isinstance(policy, str):
+            # the interference-aware policy must score with the same
+            # turnaround bound the device schedulers enforce
+            kwargs = ({"turnaround_bound": threshold}
+                      if policy == "interference_aware" else {})
+            self.policy = get_policy(policy, **kwargs)
+        else:
+            self.policy = policy
+        self.horizon = horizon
+        self.check_interval = check_interval
+        self.threshold = threshold
+        self.max_be = max_be_per_device
+        self.min_window = min_window
+        self.devices = [
+            ManagedDevice(i, DeviceEngine(m, horizon, threshold))
+            for i, m in enumerate(models)
+        ]
+        # victim selection shares the interference-aware policy's memoized
+        # estimator when available, so each (workload, device) pair is
+        # profiled at most once per fleet
+        self._disruption = getattr(self.policy, "estimator",
+                                   None) or TurnaroundEstimator(threshold)
+        self._ran = False
+
+    # -- placement plumbing ----------------------------------------------------
+
+    def _views(self, now: float,
+               exclude: Optional[int] = None) -> List[DeviceView]:
+        views = []
+        for d in self.devices:
+            if d.index == exclude:
+                continue
+            views.append(DeviceView(
+                index=d.index, dev=d.dev, has_hp=d.hp_job is not None,
+                n_be=len(d.be_jobs), max_be=self.max_be,
+                hp_occupancy=d.occupancy(now, self.check_interval),
+                be_workloads=tuple(j.workload for j in d.be_jobs.values()),
+            ))
+        return views
+
+    def _service_trace(self, job: JobSpec, d: ManagedDevice,
+                       now: float) -> TrafficTrace:
+        if job.trace is not None:
+            return job.trace
+        span = self.horizon - now
+        iso = isolated_time(job.workload, d.dev)
+        # generate at the target rate so rescaling is ~identity and the
+        # trace keeps covering the service's whole active span
+        # (scale_to_load compresses TIME by the rate factor)
+        base = maf2_like_trace(duration=span, mean_rate=job.load / iso,
+                               seed=job.seed)
+        return scale_to_load(base, iso, job.load)
+
+    def _place(self, job: JobSpec, now: float) -> bool:
+        idx = self.policy.place(job.kind, job.workload, self._views(now))
+        if idx is None:
+            return False
+        d = self.devices[idx]
+        if job.kind == "hp_service":
+            trace = self._service_trace(job, d, now)
+            d.engine.attach_hp(job.workload, trace, offset=now)
+            d.hp_job, d.hp_placed_at = job, now
+            d.lat_seen = 0
+            # isolated reference: same trace on an empty device
+            iso = simulate("tally", job.workload, [], trace, d.dev,
+                           duration=self.horizon - now,
+                           threshold=self.threshold)
+            d.iso = _IsoRef(p99=iso.latency.p99(), count=iso.latency.count)
+        else:
+            # clients (and per-device books) are keyed by workload name, so
+            # run each BE job under its own job name — two jobs may share
+            # one workload definition
+            wl = job.workload
+            if wl.name != job.name:
+                wl = dataclasses.replace(wl, name=job.name)
+            d.engine.attach_be(wl)
+            d.be_jobs[job.name] = job
+            d.be_placed_at[job.name] = now
+            if job.duration is not None:    # departure becomes a decision
+                self._add_point(now + job.duration)     # point (placed+dur)
+        self._placements.append((now, job.name, idx))
+        return True
+
+    # -- migration -------------------------------------------------------------
+
+    def _check_slo(self, now: float) -> None:
+        for d in self.devices:
+            if d.hp_job is None or d.iso is None:
+                continue
+            if not d.be_jobs:
+                # nothing to migrate: consume the clean history so a BE
+                # attached later is judged only on post-attach requests
+                d.lat_seen = len(d.engine.book.latency.latencies)
+                continue
+            window = d.window_latencies(self.min_window)
+            if len(window) < self.min_window:
+                continue                     # accumulate until checkable
+            bound = d.hp_job.slo_factor * d.iso.p99
+            if not math.isfinite(bound) or _p99(window) <= bound:
+                continue
+            # violation: evict the most disruptive BE job, carrying progress
+            victim = max(d.be_jobs,
+                         key=lambda n: self._disruption(
+                             d.be_jobs[n].workload, d.dev))
+            job = d.be_jobs[victim]
+            idx = self.policy.place("be_train", job.workload,
+                                    self._views(now, exclude=d.index))
+            if idx is None:
+                continue               # nowhere to go: stay (next check retries)
+            client = d.engine.detach_be(victim)
+            del d.be_jobs[victim]
+            placed_at = d.be_placed_at.pop(victim)
+            dst = self.devices[idx]
+            dst.engine.attach_be(client=client)
+            dst.be_jobs[victim] = job
+            dst.be_placed_at[victim] = placed_at
+            self.migrations.append(Migration(now, victim, d.index, idx))
+
+    def _depart_finished(self, now: float) -> None:
+        for d in self.devices:
+            done = [n for n, j in d.be_jobs.items()
+                    if j.duration is not None
+                    and now >= d.be_placed_at[n] + j.duration]
+            for n in done:
+                d.engine.detach_be(n)
+                del d.be_jobs[n]
+                self._departed[n] = d.index
+
+    # -- main loop -------------------------------------------------------------
+
+    def run(self, jobs: List[JobSpec]) -> FleetResult:
+        if self._ran:
+            raise RuntimeError("FleetSimulator.run is single-use (device "
+                               "engines carry state); construct a new "
+                               "FleetSimulator per run")
+        self._ran = True
+        names = [j.name for j in jobs]
+        if len(set(names)) != len(names):
+            raise ValueError("job names must be unique")
+        self.migrations: List[Migration] = []
+        self._placements: List[Tuple[float, str, int]] = []
+        self._departed: Dict[str, int] = {}
+        pending: Deque[JobSpec] = deque()
+        arrivals = sorted(jobs, key=lambda j: (j.arrival, j.name))
+        n_ticks = int(math.ceil(self.horizon / self.check_interval))
+        self._points = [j.arrival for j in jobs if j.arrival <= self.horizon]
+        self._points += [i * self.check_interval for i in range(1, n_ticks)]
+        self._points.append(self.horizon)
+        heapq.heapify(self._points)
+        arr_i = 0
+        prev = -1.0
+        while self._points:
+            t = heapq.heappop(self._points)
+            if t <= prev:                        # dedup; strict time order
+                continue
+            prev = t
+            # strict at decision points so clients attach at exactly t; the
+            # final advance keeps single-run semantics (the event crossing
+            # the horizon is still recorded) — the 1-GPU equivalence
+            # contract depends on both
+            for d in self.devices:
+                d.engine.advance(t, strict=(t < self.horizon))
+            if t > 0.0:
+                self._check_slo(t)
+                self._depart_finished(t)
+            while arr_i < len(arrivals) and arrivals[arr_i].arrival <= t:
+                pending.append(arrivals[arr_i])
+                arr_i += 1
+            # HP services admit first; FIFO within each class
+            still: List[JobSpec] = []
+            for job in sorted(pending,
+                              key=lambda j: (j.kind != "hp_service",
+                                             j.arrival)):
+                if t >= self.horizon or not self._place(job, t):
+                    still.append(job)
+            pending = deque(still)
+        for d in self.devices:
+            d.engine.finalize()
+        return self._collect(jobs)
+
+    def _add_point(self, t: float) -> None:
+        """Register a future decision point discovered mid-run (a BE
+        departure is known only at placement: placed_at + duration)."""
+        if t <= self.horizon:
+            heapq.heappush(self._points, t)
+
+    # -- aggregation -----------------------------------------------------------
+
+    def _collect(self, jobs: List[JobSpec]) -> FleetResult:
+        placed_at = {name: (t, idx) for t, name, idx in self._placements}
+        result = FleetResult(n_devices=len(self.devices),
+                             horizon=self.horizon, policy=self.policy.name,
+                             migrations=self.migrations,
+                             unplaced=[j.name for j in jobs
+                                       if j.name not in placed_at],
+                             placements=list(self._placements))
+        for job in jobs:
+            if job.kind == "hp_service":
+                result.services[job.name] = self._service_report(
+                    job, placed_at.get(job.name))
+            else:
+                result.be_jobs[job.name] = self._be_report(
+                    job, placed_at.get(job.name))
+        return result
+
+    def _service_report(self, job: JobSpec,
+                        placed: Optional[Tuple[float, int]]) -> ServiceReport:
+        if placed is None:
+            return ServiceReport(name=job.name, device=None,
+                                 slo_factor=job.slo_factor)
+        t0, idx = placed
+        d = self.devices[idx]
+        lats = d.engine.book.latency
+        iso = d.iso
+        assert iso is not None
+        bound = job.slo_factor * iso.p99
+        good = sum(1 for x in lats.latencies if x <= bound)
+        return ServiceReport(
+            name=job.name, device=idx, placed_at=t0,
+            requests_done=lats.count, p99=lats.p99(), ideal_p99=iso.p99,
+            slo_factor=job.slo_factor,
+            slo_attainment=good / lats.count if lats.count else 0.0,
+            norm_goodput=good / iso.count if iso.count else 0.0,
+            active_span=self.horizon - t0,
+        )
+
+    def _be_report(self, job: JobSpec,
+                   placed: Optional[Tuple[float, int]]) -> BEReport:
+        if placed is None:
+            return BEReport(name=job.name, device=None)
+        t0, idx = placed
+        samples = sum(d.engine.book.be_tput[job.name].samples
+                      for d in self.devices
+                      if job.name in d.engine.book.be_tput)
+        final = next((d.index for d in self.devices
+                      if job.name in d.be_jobs),
+                     self._departed.get(job.name, idx))
+        span = min(job.duration or float("inf"), self.horizon - t0)
+        rate = samples / span if span > 0 else 0.0
+        w = job.workload
+        iso_rate = w.samples_per_iteration / (
+            w.iteration_time or isolated_time(w, self.devices[idx].dev))
+        n_migr = sum(1 for m in self.migrations if m.job == job.name)
+        return BEReport(name=job.name, device=final, placed_at=t0,
+                        samples=samples, rate=rate,
+                        norm_tput=rate / iso_rate if iso_rate else 0.0,
+                        migrations=n_migr, active_span=span)

@@ -1,0 +1,177 @@
+"""Placement policies for the cluster-scale fleet simulator.
+
+Tally isolates one GPU; a production cluster (Jeon et al., arXiv:1901.05758)
+must also decide *which* GPU each arriving job lands on. Policies here see a
+snapshot of every device (``DeviceView``) and return the index of the chosen
+device, or ``None`` to leave the job in the admission queue.
+
+Feasibility (enforced before any policy runs):
+  - at most ONE high-priority inference service per device (Tally's
+    deployment model: one production job plus opportunistic BE jobs),
+  - at most ``max_be`` best-effort clients per device.
+
+Policies:
+  first_fit           lowest-index feasible device (baseline)
+  least_loaded        feasible device with the least HP occupancy, ties
+                      broken by BE population then index
+  interference_aware  scores candidate devices with the same
+                      ``TransparentProfiler`` machinery the Tally server
+                      uses online: a BE job's kernels are profiled against
+                      the candidate's device model and the expected HP
+                      disturbance is (HP occupancy) x (mean turnaround of
+                      the BE kernels' chosen launch configs). An HP service
+                      symmetrically avoids devices whose resident BE jobs
+                      have coarse (high-turnaround) kernels.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.device_model import DeviceModel
+from repro.core.profiler import TransparentProfiler
+from repro.core.workloads import Workload
+
+
+@dataclass(frozen=True)
+class DeviceView:
+    """Immutable placement-time snapshot of one fleet device."""
+
+    index: int
+    dev: DeviceModel
+    has_hp: bool
+    n_be: int
+    max_be: int
+    hp_occupancy: float          # measured/declared HP busy fraction [0, 1]
+    be_workloads: Tuple[Workload, ...] = ()
+
+    def feasible_for(self, kind: str) -> bool:
+        if kind == "hp_service":
+            return not self.has_hp
+        return self.n_be < self.max_be
+
+
+class PlacementPolicy:
+    """Chooses a device index for a job, or None (stay queued)."""
+
+    name = "base"
+
+    def place(self, kind: str, workload: Workload,
+              views: Sequence[DeviceView]) -> Optional[int]:
+        raise NotImplementedError
+
+    @staticmethod
+    def feasible(kind: str,
+                 views: Sequence[DeviceView]) -> List[DeviceView]:
+        return [v for v in views if v.feasible_for(kind)]
+
+
+class FirstFit(PlacementPolicy):
+    """Lowest-index device that satisfies the feasibility constraints."""
+
+    name = "first_fit"
+
+    def place(self, kind: str, workload: Workload,
+              views: Sequence[DeviceView]) -> Optional[int]:
+        cands = self.feasible(kind, views)
+        return cands[0].index if cands else None
+
+
+class LeastLoaded(PlacementPolicy):
+    """Least HP occupancy first — spreads BE jobs away from busy
+    production services and HP services away from crowded devices."""
+
+    name = "least_loaded"
+
+    def place(self, kind: str, workload: Workload,
+              views: Sequence[DeviceView]) -> Optional[int]:
+        cands = self.feasible(kind, views)
+        if not cands:
+            return None
+        best = min(cands, key=lambda v: (v.hp_occupancy, v.n_be, v.index))
+        return best.index
+
+
+def estimate_turnaround(workload: Workload, dev: DeviceModel,
+                        bound: float, max_kernels: int = 8) -> float:
+    """Mean turnaround (s) of the workload's dominant kernels after Tally's
+    launch-config search on ``dev`` — the profiler-backed interference
+    signal. Long kernels dominate HP p99 disturbance, so only the
+    ``max_kernels`` longest unique kernels are profiled (profile_runs=1:
+    the simulator's pricing is deterministic)."""
+    # local import: simulator imports this module's sibling types
+    from repro.core.simulator import make_measure
+
+    kernels = workload.iteration(0)
+    uniq: Dict[str, object] = {}
+    for k in kernels:
+        uniq.setdefault(k.name, k)
+    top = sorted(uniq.values(), key=lambda k: k.duration(dev),
+                 reverse=True)[:max_kernels]
+    if not top:
+        return 0.0
+    prof = TransparentProfiler(make_measure(dev), dev.sm_count,
+                               turnaround_bound=bound, profile_runs=1)
+    tas = []
+    for k in top:
+        prof.launch_and_profile(k)
+        tas.append(prof.entry(k).turnaround)
+    return sum(tas) / len(tas)
+
+
+class TurnaroundEstimator:
+    """Memoized ``estimate_turnaround`` — shared between the
+    interference-aware policy and the fleet's migration victim selection
+    so each (workload, device) pair is profiled once."""
+
+    def __init__(self, bound: float = 0.0316e-3):
+        self.bound = bound
+        self._cache: Dict[Tuple[str, str], float] = {}
+
+    def __call__(self, workload: Workload, dev: DeviceModel) -> float:
+        key = (workload.name, dev.name)
+        if key not in self._cache:
+            self._cache[key] = estimate_turnaround(workload, dev, self.bound)
+        return self._cache[key]
+
+
+class InterferenceAware(PlacementPolicy):
+    """Profiler-backed scoring (see module docstring). Falls back to
+    least-loaded ordering among score ties."""
+
+    name = "interference_aware"
+
+    def __init__(self, turnaround_bound: float = 0.0316e-3):
+        self.estimator = TurnaroundEstimator(turnaround_bound)
+
+    def _score(self, kind: str, workload: Workload, v: DeviceView) -> float:
+        if kind == "hp_service":
+            # expected disturbance from already-resident BE jobs
+            return sum(self.estimator(w, v.dev) for w in v.be_workloads)
+        # BE job: disturbance it would inflict on the resident HP service
+        if not v.has_hp:
+            return 0.0
+        return v.hp_occupancy * self.estimator(workload, v.dev)
+
+    def place(self, kind: str, workload: Workload,
+              views: Sequence[DeviceView]) -> Optional[int]:
+        cands = self.feasible(kind, views)
+        if not cands:
+            return None
+        best = min(cands, key=lambda v: (self._score(kind, workload, v),
+                                         v.hp_occupancy, v.n_be, v.index))
+        return best.index
+
+
+PLACEMENT_POLICIES = ("first_fit", "least_loaded", "interference_aware")
+
+
+def get_policy(name: str, **kwargs) -> PlacementPolicy:
+    if name == "first_fit":
+        return FirstFit()
+    if name == "least_loaded":
+        return LeastLoaded()
+    if name == "interference_aware":
+        return InterferenceAware(**kwargs)
+    raise ValueError(f"unknown placement policy {name!r}; "
+                     f"known: {PLACEMENT_POLICIES}")

@@ -22,7 +22,7 @@ model; the real-mode engine wall-clocks the transformed Pallas kernels).
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Tuple
 
 DEFAULT_TURNAROUND_BOUND = 0.0316e-3     # seconds (paper §5.6)

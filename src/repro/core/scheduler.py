@@ -20,10 +20,9 @@ Policy (mirrors Fig. 4 line-by-line):
 """
 from __future__ import annotations
 
-import itertools
 from collections import deque
-from dataclasses import dataclass, field
-from typing import Any, Callable, Deque, Dict, List, Optional, Protocol, Tuple
+from dataclasses import dataclass
+from typing import Any, Deque, List, Optional, Protocol
 
 from repro.core.profiler import (DEFAULT, LaunchConfig, TransparentProfiler)
 from repro.core.workloads import SimKernel, Workload
@@ -141,6 +140,20 @@ class TallyScheduler:
         self.ex = executor
         self.transforms_enabled = transforms_enabled
 
+    # -- client membership (fleet layer: jobs arrive / migrate at runtime) ----
+
+    def add_client(self, client: Client) -> None:
+        """Admit a client mid-run (stable priority order is preserved, so a
+        fleet that attaches clients incrementally schedules identically to a
+        constructor that received them all up front)."""
+        self.clients.append(client)
+        self.clients.sort(key=lambda c: c.priority)
+
+    def remove_client(self, client: Client) -> None:
+        """Detach a client (BE migration). The caller must first cancel or
+        drain any in-flight launch owned by this client."""
+        self.clients.remove(client)
+
     # -- policy ---------------------------------------------------------------
 
     def hp_active(self) -> bool:
@@ -206,9 +219,22 @@ class TallyScheduler:
 
     # -- main loop --------------------------------------------------------------
 
-    def run(self, until: float) -> None:
+    def run(self, until: float, *, strict: bool = False) -> None:
+        """Drive the executor until the clock passes ``until``.
+
+        Default mode matches the original single-run semantics: the first
+        event *past* the horizon is still processed (its completion is
+        recorded) before the loop exits. ``strict`` stops *at* the horizon
+        without consuming any later event — the fleet layer uses it at
+        intermediate decision points so a client attached at time t joins a
+        device whose clock is exactly t (requires the executor to expose
+        ``next_event_time``)."""
         while self.ex.now() < until:
             if self.schedule_once():
                 continue
+            if strict:
+                nxt = self.ex.next_event_time()
+                if nxt is None or nxt > until:
+                    break
             if not self.ex.wait():
                 break

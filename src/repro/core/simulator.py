@@ -31,10 +31,8 @@ from __future__ import annotations
 import heapq
 import itertools
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Tuple
-
-import numpy as np
 
 from repro.core.device_model import A100, DeviceModel
 from repro.core.metrics import LatencyStats, RunResult, ThroughputStats
@@ -198,8 +196,52 @@ class SimExecutor:
     def now(self) -> float:
         return self.clock
 
+    def next_event_time(self) -> Optional[float]:
+        """Timestamp of the earliest queued event (None when idle)."""
+        return self.events[0][0] if self.events else None
+
     def device_busy(self) -> bool:
         return self.inflight is not None
+
+    # -- dynamic attachment (fleet layer) --------------------------------------
+
+    def set_hp_client(self, client: Client,
+                      samples_per_request: float) -> None:
+        """Wire the (single) high-priority client post-init; must happen
+        before any of its ARRIVAL events fire."""
+        self.hp_client = client
+        self.samples_per_request = samples_per_request
+
+    def add_request(self, t: float, rid: int,
+                    kernels: List[SimKernel]) -> None:
+        """Enqueue one HP request arrival (same path as the constructor)."""
+        self._push(t, ARRIVAL, (rid, kernels))
+
+    def cancel_inflight_be(self, client: Client) -> bool:
+        """Forcibly retire `client`'s in-flight BE launch at the current
+        clock, crediting whole completed rounds/slices to its watermark
+        (migration support: progress carries to the next device). Mirrors
+        the COMPLETE branch of ``wait`` minus the drain delay."""
+        inf = self.inflight
+        if inf is None or inf.kind != "be" or inf.client is not client:
+            return False
+        assert inf.prog is not None
+        self.inflight = None          # pending COMPLETE event becomes stale
+        self.be_busy_time += max(0.0, self.clock - inf.start)
+        elapsed = self.clock - inf.start - self.dev.launch_overhead
+        if inf.round_t > 0:
+            rounds = max(0, math.floor(elapsed / inf.round_t))
+        else:
+            rounds = 0
+        done = min(inf.prog.remaining, rounds * inf.tasks_per_round)
+        self.scheduler.on_be_complete(client, inf.prog,
+                                      inf.prog.watermark + done)
+        if client.current is None:               # kernel happened to finish
+            wl = client.workload
+            self.book.iteration_done(client.name, wl.samples_per_kernel)
+            if wl.host_gap > 0:
+                client.not_ready_until = self.clock + wl.host_gap
+        return True
 
     # -- launches --------------------------------------------------------------
 
@@ -318,27 +360,120 @@ class SimExecutor:
         return False
 
 
+class DeviceEngine:
+    """One resumable simulated GPU: executor + scheduler + bookkeeping.
+
+    The single-GPU entry point (`_run_priority`) and the fleet layer
+    (``core.fleet``) share this class: a fleet device is simply a
+    ``DeviceEngine`` advanced in lockstep segments, with clients attached
+    and detached at fleet decision points. ``advance`` may be called
+    repeatedly with increasing horizons; a segmented run is event-for-event
+    identical to one continuous run (the fleet's single-device-equivalence
+    contract, guarded by ``tests/test_fleet.py``).
+    """
+
+    def __init__(self, dev: DeviceModel = A100, duration: float = 60.0,
+                 threshold: float = 0.0316e-3, *,
+                 transforms_enabled: bool = True):
+        self.dev = dev
+        self.duration = duration
+        self.book = Bookkeeper(duration)
+        self.ex = SimExecutor(dev, None, [], self.book, duration,
+                              samples_per_request=1.0)
+        self.profiler = TransparentProfiler(make_measure(dev), dev.sm_count,
+                                            turnaround_bound=threshold)
+        self.sched = TallyScheduler([], self.profiler, self.ex,
+                                    transforms_enabled=transforms_enabled)
+        self.ex.scheduler = self.sched
+        self.hp_client: Optional[Client] = None
+        self.be_clients: List[Client] = []
+
+    # -- client attachment ----------------------------------------------------
+
+    def attach_hp(self, workload: Workload, trace: Optional[TrafficTrace],
+                  offset: float = 0.0) -> Client:
+        """Attach the device's (single) high-priority service; its request
+        arrivals are trace times shifted by ``offset`` (admission time)."""
+        if self.hp_client is not None:
+            raise ValueError(f"device already hosts HP service "
+                             f"{self.hp_client.name!r}")
+        client = Client(workload)
+        self.hp_client = client
+        self.ex.set_hp_client(client, workload.samples_per_iteration)
+        if trace is not None:
+            for rid, t in enumerate(trace.arrivals):
+                ta = float(t) + offset
+                if ta >= self.duration:
+                    break
+                self.ex.add_request(ta, rid, workload.iteration(rid))
+        self.sched.add_client(client)
+        return client
+
+    def attach_be(self, workload: Optional[Workload] = None,
+                  client: Optional[Client] = None) -> Client:
+        """Attach a best-effort client — fresh from a workload, or an
+        existing ``Client`` carrying its watermarked progress (migration)."""
+        if client is None:
+            assert workload is not None
+            client = Client(workload)
+        self.be_clients.append(client)
+        self.sched.add_client(client)
+        if client.not_ready_until > self.ex.now():    # mid host-side gap:
+            self.ex._push(client.not_ready_until, TIMER, None)  # wake-up
+        return client
+
+    def detach_be(self, name: str) -> Client:
+        """Detach a BE client (first match by name), cancelling any
+        in-flight launch at the current clock (completed rounds stay
+        credited in its watermark). The returned ``Client`` can be
+        re-attached to another engine."""
+        client = next(c for c in self.be_clients if c.name == name)
+        self.be_clients.remove(client)
+        self.ex.cancel_inflight_be(client)
+        self.sched.remove_client(client)
+        return client
+
+    # -- time -----------------------------------------------------------------
+
+    def now(self) -> float:
+        return self.ex.now()
+
+    def advance(self, until: float, *, strict: bool = False) -> None:
+        """Run the scheduler loop until the virtual clock passes ``until``
+        (or the device goes fully idle), then align the clock so load
+        estimates at fleet decision points use a common elapsed time.
+        ``strict`` stops exactly at ``until`` without consuming later
+        events (fleet decision points; see ``TallyScheduler.run``)."""
+        until = min(until, self.duration)
+        self.sched.run(until, strict=strict)
+        self.ex.clock = max(self.ex.clock, until)
+
+    def finalize(self) -> Bookkeeper:
+        self.book.meta = {"profiled_kernels": self.profiler.profiled_kernels,
+                          "profile_time_s": self.profiler.profile_time}
+        return self.book
+
+    # -- load introspection (placement signals) --------------------------------
+
+    def hp_busy_fraction(self, since: float = 0.0) -> float:
+        """Fraction of time since ``since`` spent running HP kernels
+        (pass the service's attach time, or HP busy time accumulated on an
+        idle prefix dilutes the signal for late-placed services)."""
+        span = self.ex.now() - since
+        return self.ex.hp_busy_time / span if span > 0 else 0.0
+
+
 def _run_priority(policy: str, hp: Optional[Workload], bes: List[Workload],
                   trace: Optional[TrafficTrace], dev: DeviceModel,
                   duration: float, threshold: float) -> Bookkeeper:
-    book = Bookkeeper(duration)
-    hp_client = Client(hp) if hp is not None else None
-    be_clients = [Client(w) for w in bes]
-    requests = (_expand_requests(hp, trace, duration)
-                if hp is not None and trace is not None else [])
-    ex = SimExecutor(dev, hp_client, requests, book, duration,
-                     samples_per_request=(hp.samples_per_iteration
-                                          if hp else 1.0))
-    profiler = TransparentProfiler(make_measure(dev), dev.sm_count,
-                                   turnaround_bound=threshold)
-    clients = ([hp_client] if hp_client else []) + be_clients
-    sched = TallyScheduler(clients, profiler, ex,
-                           transforms_enabled=(policy == "tally"))
-    ex.scheduler = sched
-    sched.run(duration)
-    book.meta = {"profiled_kernels": profiler.profiled_kernels,
-                 "profile_time_s": profiler.profile_time}
-    return book
+    eng = DeviceEngine(dev, duration, threshold,
+                       transforms_enabled=(policy == "tally"))
+    if hp is not None:
+        eng.attach_hp(hp, trace)
+    for w in bes:
+        eng.attach_be(w)
+    eng.advance(duration)
+    return eng.finalize()
 
 
 # ---------------------------------------------------------------------------
@@ -429,7 +564,6 @@ def _run_concurrent(policy: str, hp: Optional[Workload],
                 if hp is not None and trace is not None else [])
     arr_i = 0
     clock = 0.0
-    hp_hold_until = -1.0          # HP slot retention window (priority mode)
 
     def entry_delay(st: _Stream) -> float:
         others = [s for s in streams
@@ -500,8 +634,6 @@ def _run_concurrent(policy: str, hp: Optional[Workload],
         clock = t_next
         for s in streams:
             if s.pk is not None and s.entered and s.rem <= 1e-12:
-                if s.is_hp and priority:
-                    hp_hold_until = clock + 1e-3     # burst retention
                 _finish_kernel(s, book, clock, dev)
     return book
 

@@ -15,7 +15,7 @@ latency of a model, rescale arrival rate so `load = rate * latency`.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Sequence
+from typing import List
 
 import numpy as np
 

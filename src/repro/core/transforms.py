@@ -39,17 +39,15 @@ sequential sweep inside the task (the cluster-level fallback of paper §6).
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass
 from functools import partial
-from typing import Any, Callable, List, Optional, Sequence, Tuple
+from typing import Callable, List, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-from repro.core.descriptor import BlockMap, KernelDescriptor, build_plain
+from repro.core.descriptor import BlockMap, KernelDescriptor
 
 
 # ---------------------------------------------------------------------------

@@ -23,11 +23,8 @@ plumbing.
 """
 from __future__ import annotations
 
-import itertools
-import math
 import threading
 import time
-from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -37,11 +34,11 @@ import numpy as np
 
 from repro.core import transforms as T
 from repro.core.descriptor import KernelDescriptor, build_plain
-from repro.core.profiler import (DEFAULT, ExecSample, LaunchConfig,
+from repro.core.profiler import (ExecSample, LaunchConfig,
                                  TransparentProfiler)
 from repro.core.scheduler import (BEProgress, Client, PendingKernel,
                                   TallyScheduler)
-from repro.core.workloads import SimKernel, Workload
+from repro.core.workloads import Workload
 
 
 # ---------------------------------------------------------------------------

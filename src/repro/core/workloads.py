@@ -22,10 +22,9 @@ replays on A100 (paper comparison) or TPU v5e (deployment target).
 """
 from __future__ import annotations
 
-import dataclasses
 import zlib
-from dataclasses import dataclass, field
-from typing import Callable, Dict, Iterator, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
 

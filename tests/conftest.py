@@ -3,8 +3,6 @@ here — smoke tests and benches see 1 device; only launch/dryrun.py forces 512.
 """
 import dataclasses
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -128,7 +128,6 @@ def test_input_specs_all_cells(arch):
 
 def test_param_counts_match_configs():
     """Declared param trees agree with the analytic param_count()."""
-    from repro.models.common import param_count_tree, shapes_from_specs
     for arch in ARCHS:
         cfg = get_config(arch)
         model = build_model(cfg)

@@ -1,11 +1,10 @@
 """Data pipeline determinism/sharding + checkpoint atomicity/restart."""
-import threading
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.checkpoint import (CheckpointConfig, CheckpointManager,
                               latest_step, restore, save)

@@ -1,9 +1,8 @@
 """Fault tolerance: heartbeats, stragglers, elastic re-mesh, recovery."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.distributed.fault_tolerance import (HeartbeatMonitor,
-                                               RecoveryAction,
                                                StragglerDetector,
                                                decide_recovery,
                                                plan_elastic_remesh)

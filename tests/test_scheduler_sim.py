@@ -2,15 +2,15 @@
 turnaround-bounded config selection, policy ordering, traffic scaling."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.device_model import A100
 from repro.core.profiler import (DEFAULT, LaunchConfig, TransparentProfiler,
                                  candidate_configs)
 from repro.core.simulator import (POLICIES, make_measure, price_launch,
-                                  run_policy, simulate, task_time)
+                                  run_policy)
 from repro.core.traffic import maf2_like_trace, scale_to_load
-from repro.core.workloads import (SimKernel, Workload, isolated_time,
+from repro.core.workloads import (SimKernel, isolated_time,
                                   paper_workload)
 
 
@@ -52,7 +52,7 @@ def test_profiler_falls_back_to_min_turnaround():
     k = SimKernel("k1", flops=3e10, bytes=1e8, blocks=50)
     prof = TransparentProfiler(make_measure(A100), A100.sm_count,
                                turnaround_bound=1e-9)
-    cfg = prof.launch_and_profile(k)
+    prof.launch_and_profile(k)
     ent = prof.entry(k)
     cands = candidate_configs(k.blocks, A100.sm_count)
     meas = [prof.lookup_measurement(k, c) for c in cands]

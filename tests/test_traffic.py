@@ -1,0 +1,67 @@
+"""MAF2-style traffic generation: rate rescaling, load protocol round-trip,
+and determinism (no hypothesis dependency — runs in the bare image)."""
+import numpy as np
+import pytest
+
+from repro.core.traffic import (TrafficTrace, condensed_timeseries,
+                                maf2_like_trace, scale_to_load)
+
+
+def test_rescale_rate_rejects_nonpositive_factor():
+    trace = maf2_like_trace(duration=20.0, seed=0)
+    for factor in (0.0, -1.0):
+        with pytest.raises(ValueError):
+            trace.rescale_rate(factor)
+
+
+def test_rescale_rate_scales_mean_rate():
+    trace = maf2_like_trace(duration=50.0, mean_rate=10.0, seed=4)
+    for factor in (0.25, 3.0):
+        scaled = trace.rescale_rate(factor)
+        assert scaled.mean_rate == pytest.approx(trace.mean_rate * factor)
+        assert len(scaled.arrivals) == len(trace.arrivals)
+
+
+def test_scale_to_load_round_trip():
+    """The paper's protocol: after rescaling, load == rate x latency."""
+    trace = maf2_like_trace(duration=100.0, mean_rate=5.0, seed=1)
+    for load in (0.1, 0.5, 0.9):
+        for latency in (1.37e-3, 0.2):
+            scaled = scale_to_load(trace, latency, load)
+            assert scaled.mean_rate * latency == pytest.approx(load,
+                                                               rel=1e-6)
+
+
+def test_scale_to_load_validates_inputs():
+    trace = maf2_like_trace(duration=20.0, seed=0)
+    for load in (0.0, 1.0, -0.5):
+        with pytest.raises(ValueError):
+            scale_to_load(trace, 1e-3, load)
+    empty = TrafficTrace(np.array([], dtype=np.float64), 10.0)
+    with pytest.raises(ValueError):
+        scale_to_load(empty, 1e-3, 0.5)
+
+
+def test_maf2_trace_deterministic_under_fixed_seed():
+    a = maf2_like_trace(duration=60.0, mean_rate=25.0, seed=7)
+    b = maf2_like_trace(duration=60.0, mean_rate=25.0, seed=7)
+    np.testing.assert_array_equal(a.arrivals, b.arrivals)
+    c = maf2_like_trace(duration=60.0, mean_rate=25.0, seed=8)
+    assert not np.array_equal(a.arrivals, c.arrivals)
+
+
+def test_maf2_trace_is_sorted_and_bounded():
+    trace = maf2_like_trace(duration=30.0, mean_rate=40.0, burstiness=3.0,
+                            seed=2)
+    arr = trace.arrivals
+    assert np.all(np.diff(arr) >= 0)
+    assert arr.min() >= 0.0 and arr.max() < trace.duration
+    # mean rate lands near the target despite burstiness
+    assert trace.mean_rate == pytest.approx(40.0, rel=0.25)
+
+
+def test_condensed_timeseries_conserves_requests():
+    trace = maf2_like_trace(duration=30.0, mean_rate=15.0, seed=5)
+    counts = condensed_timeseries(trace, bins=10)
+    assert counts.shape == (10,)
+    assert counts.sum() == len(trace.arrivals)

@@ -1,8 +1,6 @@
 """Training driver end-to-end: loss decreases, checkpoint/restart exact."""
 import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.launch.train import train
 

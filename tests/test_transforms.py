@@ -1,11 +1,10 @@
 """Tally transformation-pass correctness: sliced and preemptive forms must
 reproduce the plain kernel exactly, for every kernel family, any slice
 count / worker count / budget schedule (property-tested)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import transforms as T
 from repro.core.descriptor import build_plain
