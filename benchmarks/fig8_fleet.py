@@ -59,9 +59,10 @@ def build_jobs(mix: str, horizon: float) -> List[JobSpec]:
 
 
 def run_scenario(n_gpus: int, mix: str, policy: str,
-                 horizon: float) -> Dict[str, float]:
+                 horizon: float, fast: bool = True) -> Dict[str, float]:
     fleet = FleetSimulator(n_gpus, policy, horizon=horizon,
-                           check_interval=horizon / 10, min_window=15)
+                           check_interval=horizon / 10, min_window=15,
+                           fast=fast)
     res = fleet.run(build_jobs(mix, horizon))
     p99s = [s.p99 for s in res.services.values() if np.isfinite(s.p99)]
     slos = [s.slo_attainment for s in res.services.values()

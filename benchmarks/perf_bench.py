@@ -1,0 +1,185 @@
+"""Simulation-substrate performance benchmark (the repo's perf ledger).
+
+Measures the discrete-event engines that every headline number flows
+through, in two tiers:
+
+  1. **Single-device engine throughput** — simulated kernel completions
+     per wall-second for a representative ``tally`` co-location run,
+     fast path vs the reference per-kernel event loop (``fast=False``).
+  2. **Fig. 8 fleet sweep wall time** — the same scenario grid as
+     ``benchmarks.fig8_fleet`` (quick tier), fast vs reference, asserting
+     the two engines produce identical cluster goodput (the equivalence
+     contract at benchmark scale).
+
+Results land in ``benchmarks/results/BENCH_perf.json`` so regressions in
+simulated-events/sec are visible across PRs.
+
+    PYTHONPATH=src python -m benchmarks.perf_bench            # full grid
+    PYTHONPATH=src python -m benchmarks.perf_bench --quick    # CI smoke
+    PYTHONPATH=src python -m benchmarks.perf_bench --skip-reference
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+from typing import Dict, List, Tuple
+
+from repro.core import placement, simulator
+from repro.core.device_model import A100
+from repro.core.simulator import simulate
+from repro.core.traffic import maf2_like_trace, scale_to_load
+from repro.core.workloads import isolated_time, paper_workload
+from benchmarks.common import RESULTS, fmt_table
+from benchmarks.fig8_fleet import MIXES, run_scenario
+
+from repro.core.placement import PLACEMENT_POLICIES
+
+
+def _cold_caches() -> None:
+    """Clear the process-wide memos (launch pricing, placement turnaround
+    estimates) before each timed run, so both engines are measured the way
+    a fresh process runs them — otherwise whichever engine runs second
+    inherits the first one's warm caches and the comparison is skewed."""
+    simulator._PRICE_MEMO.clear()
+    placement._ESTIMATE_MEMO.clear()
+
+
+# ---------------------------------------------------------------------------
+# Tier 1: single-device engine throughput
+# ---------------------------------------------------------------------------
+
+
+def _count_events(book, hp, bes) -> float:
+    """Simulated kernel completions recorded in a bookkeeper."""
+    events = book.latency.count * hp.n_kernels
+    for w in bes:
+        ts = book.be_tput.get(w.name)
+        if ts is not None and w.samples_per_kernel > 0:
+            events += ts.samples / w.samples_per_kernel
+    return float(events)
+
+
+def single_device(duration: float, skip_reference: bool) -> Dict[str, float]:
+    hp = paper_workload("resnet50-infer", 0)
+    bes = [paper_workload("gpt2-train", 1)]
+    iso = isolated_time(hp, A100)
+    base = maf2_like_trace(duration=duration, mean_rate=0.5 / iso, seed=7)
+    trace = scale_to_load(base, iso, 0.5)
+
+    def timed(fast: bool) -> Tuple[float, float]:
+        _cold_caches()
+        t0 = time.perf_counter()
+        book = simulate("tally", hp, bes, trace, A100, duration=duration,
+                        fast=fast)
+        wall = time.perf_counter() - t0
+        return wall, _count_events(book, hp, bes)
+
+    wall_fast, events = timed(fast=True)
+    out = {
+        "duration_s": duration,
+        "simulated_kernels": events,
+        "wall_s_fast": wall_fast,
+        "events_per_s_fast": events / wall_fast if wall_fast else 0.0,
+    }
+    if not skip_reference:
+        wall_ref, events_ref = timed(fast=False)
+        assert events_ref == events, "engine equivalence violated"
+        out["wall_s_reference"] = wall_ref
+        out["events_per_s_reference"] = (events_ref / wall_ref
+                                         if wall_ref else 0.0)
+        out["speedup"] = wall_ref / wall_fast if wall_fast else 0.0
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Tier 2: fig8 fleet sweep wall time
+# ---------------------------------------------------------------------------
+
+
+def fig8_sweep(sizes, mixes, policies, horizon: float,
+               skip_reference: bool) -> Dict[str, object]:
+    grid = [(n, mix, pol) for n in sizes for mix in mixes
+            for pol in policies]
+
+    def timed(fast: bool) -> Tuple[float, List[float]]:
+        _cold_caches()
+        t0 = time.perf_counter()
+        goodputs = [run_scenario(n, mix, pol, horizon, fast=fast)["goodput"]
+                    for n, mix, pol in grid]
+        return time.perf_counter() - t0, goodputs
+
+    wall_fast, good_fast = timed(fast=True)
+    out: Dict[str, object] = {
+        "scenarios": len(grid),
+        "sizes": list(sizes),
+        "mixes": list(mixes),
+        "policies": list(policies),
+        "horizon_s": horizon,
+        "wall_s_fast": wall_fast,
+    }
+    if not skip_reference:
+        wall_ref, good_ref = timed(fast=False)
+        out["wall_s_reference"] = wall_ref
+        out["speedup"] = wall_ref / wall_fast if wall_fast else 0.0
+        out["identical_results"] = good_fast == good_ref
+        assert out["identical_results"], \
+            "fast and reference engines diverged on the fig8 sweep"
+    return out
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced grid for CI smoke (seconds, not minutes)")
+    ap.add_argument("--skip-reference", action="store_true",
+                    help="measure the fast engine only (no slow baseline)")
+    ap.add_argument("--output", default=str(RESULTS / "BENCH_perf.json"))
+    args = ap.parse_args(argv)
+
+    t0 = time.time()
+    if args.quick:
+        sd = single_device(duration=8.0, skip_reference=args.skip_reference)
+        sweep = fig8_sweep((2,), ("balanced",),
+                           ("first_fit", "least_loaded"),
+                           horizon=8.0, skip_reference=args.skip_reference)
+        tier = "quick"
+    else:
+        sd = single_device(duration=30.0, skip_reference=args.skip_reference)
+        sweep = fig8_sweep((2, 4), tuple(MIXES), PLACEMENT_POLICIES,
+                           horizon=24.0, skip_reference=args.skip_reference)
+        tier = "full"
+
+    result = {
+        "schema": 1,
+        "tier": tier,
+        "python": platform.python_version(),
+        "machine": platform.machine(),
+        "single_device": sd,
+        "fig8_sweep": sweep,
+        "bench_wall_s": time.time() - t0,
+    }
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    with open(args.output, "w") as f:
+        json.dump(result, f, indent=1)
+
+    print("== perf_bench: simulation substrate ==")
+    rows = [{"bench": "single_device",
+             "wall_s_fast": sd["wall_s_fast"],
+             "wall_s_reference": sd.get("wall_s_reference"),
+             "speedup": sd.get("speedup"),
+             "events_per_s": sd["events_per_s_fast"]},
+            {"bench": f"fig8_sweep[{sweep['scenarios']}]",
+             "wall_s_fast": sweep["wall_s_fast"],
+             "wall_s_reference": sweep.get("wall_s_reference"),
+             "speedup": sweep.get("speedup"),
+             "events_per_s": None}]
+    print(fmt_table(rows, ("bench", "wall_s_fast", "wall_s_reference",
+                           "speedup", "events_per_s"), floatfmt="{:,.2f}"))
+    print(f"\nwrote {args.output}  ({result['bench_wall_s']:.0f}s)")
+    return result
+
+
+if __name__ == "__main__":
+    main()

@@ -16,6 +16,8 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
+import numpy as np
+
 
 @dataclass(frozen=True)
 class DeviceModel:
@@ -33,6 +35,19 @@ class DeviceModel:
         compute = flops / (self.peak_flops * max(eff, 1e-3))
         memory = bytes_ / self.hbm_bw
         return max(compute, memory) + self.launch_overhead
+
+    def kernel_times(self, flops: np.ndarray, bytes_: np.ndarray,
+                     blocks: np.ndarray) -> np.ndarray:
+        """Vectorized ``kernel_time`` over aligned arrays. Every operation
+        mirrors the scalar path in the same order, so each element is
+        bit-identical to ``kernel_time`` — the simulator's fast path prices
+        whole kernel lists with this and must agree with per-kernel
+        pricing exactly."""
+        eff = np.where(blocks == 0, 1.0,
+                       np.minimum(1.0, blocks / self.sm_count))
+        compute = flops / (self.peak_flops * np.maximum(eff, 1e-3))
+        memory = bytes_ / self.hbm_bw
+        return np.maximum(compute, memory) + self.launch_overhead
 
 
 A100 = DeviceModel(

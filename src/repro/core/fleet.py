@@ -49,7 +49,7 @@ from dataclasses import dataclass, field
 from typing import Deque, Dict, List, Optional, Tuple, Union
 
 from repro.core.device_model import A100, DeviceModel
-from repro.core.metrics import p99 as _p99
+from repro.core.metrics import WindowQuantile
 from repro.core.placement import (DeviceView, PlacementPolicy,
                                   TurnaroundEstimator, get_policy)
 from repro.core.simulator import DeviceEngine, simulate
@@ -129,6 +129,7 @@ class ManagedDevice:
         self.be_jobs: Dict[str, JobSpec] = {}
         self.be_placed_at: Dict[str, float] = {}
         self.lat_seen = 0              # watermark into book latencies
+        self.window = WindowQuantile(0.99)   # streaming SLO window (ring+P²)
         self.iso: Optional[_IsoRef] = None
 
     @property
@@ -144,16 +145,31 @@ class ManagedDevice:
             return self.engine.hp_busy_fraction(since=self.hp_placed_at)
         return self.hp_job.load
 
-    def window_latencies(self, min_window: int) -> List[float]:
-        """Latencies recorded since the last *consumed* SLO window. A
-        window below ``min_window`` is left to accumulate (low-rate
-        services still reach a checkable window eventually) — the
-        watermark only advances once the window is actually evaluated."""
+    def feed_window(self) -> None:
+        """Stream latencies recorded since the last feed into the SLO
+        window estimator (O(new) — no re-slicing / re-sorting of the full
+        history at every decision point). A window below ``min_window``
+        keeps accumulating (low-rate services still become checkable);
+        ``consume_window`` resets it once evaluated."""
         lats = self.engine.book.latency.latencies
-        window = lats[self.lat_seen:]
-        if len(window) >= min_window:
+        seen = self.lat_seen
+        if len(lats) > seen:
+            add = self.window.add
+            for x in lats[seen:]:
+                add(x)
             self.lat_seen = len(lats)
-        return window
+
+    def window_p99(self) -> float:
+        return self.window.value()
+
+    def consume_window(self) -> None:
+        self.window.reset()
+
+    def discard_window(self) -> None:
+        """Skip history that should not count toward an SLO window (e.g.
+        requests served while no BE job was resident)."""
+        self.lat_seen = len(self.engine.book.latency.latencies)
+        self.window.reset()
 
 
 # ---------------------------------------------------------------------------
@@ -178,6 +194,10 @@ class ServiceReport:
 
     @property
     def p99_overhead(self) -> float:
+        """p99 vs the isolated reference; ``nan`` for degenerate references
+        (no isolated requests / zero / NaN) rather than raising or inf."""
+        if not self.ideal_p99 > 0.0 or not math.isfinite(self.ideal_p99):
+            return float("nan")
         return self.p99 / self.ideal_p99 - 1.0
 
 
@@ -263,7 +283,7 @@ class FleetSimulator:
                  device_models: Optional[List[DeviceModel]] = None,
                  horizon: float = 60.0, check_interval: float = 5.0,
                  threshold: float = 0.0316e-3, max_be_per_device: int = 4,
-                 min_window: int = 20):
+                 min_window: int = 20, fast: bool = True):
         if device_models is not None and len(device_models) != n_devices:
             raise ValueError("device_models length must equal n_devices")
         models = device_models or [dev] * n_devices
@@ -280,8 +300,9 @@ class FleetSimulator:
         self.threshold = threshold
         self.max_be = max_be_per_device
         self.min_window = min_window
+        self.fast = fast
         self.devices = [
-            ManagedDevice(i, DeviceEngine(m, horizon, threshold))
+            ManagedDevice(i, DeviceEngine(m, horizon, threshold, fast=fast))
             for i, m in enumerate(models)
         ]
         # victim selection shares the interference-aware policy's memoized
@@ -330,10 +351,11 @@ class FleetSimulator:
             d.engine.attach_hp(job.workload, trace, offset=now)
             d.hp_job, d.hp_placed_at = job, now
             d.lat_seen = 0
+            d.window.reset()
             # isolated reference: same trace on an empty device
             iso = simulate("tally", job.workload, [], trace, d.dev,
                            duration=self.horizon - now,
-                           threshold=self.threshold)
+                           threshold=self.threshold, fast=self.fast)
             d.iso = _IsoRef(p99=iso.latency.p99(), count=iso.latency.count)
         else:
             # clients (and per-device books) are keyed by workload name, so
@@ -359,13 +381,15 @@ class FleetSimulator:
             if not d.be_jobs:
                 # nothing to migrate: consume the clean history so a BE
                 # attached later is judged only on post-attach requests
-                d.lat_seen = len(d.engine.book.latency.latencies)
+                d.discard_window()
                 continue
-            window = d.window_latencies(self.min_window)
-            if len(window) < self.min_window:
+            d.feed_window()
+            if d.window.count < self.min_window:
                 continue                     # accumulate until checkable
             bound = d.hp_job.slo_factor * d.iso.p99
-            if not math.isfinite(bound) or _p99(window) <= bound:
+            est = d.window_p99()
+            d.consume_window()
+            if not math.isfinite(bound) or est <= bound:
                 continue
             # violation: evict the most disruptive BE job, carrying progress
             victim = max(d.be_jobs,

@@ -7,6 +7,8 @@ idle-slack-filling pair scores between 1 and 2.
 """
 from __future__ import annotations
 
+import bisect
+import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Sequence
 
@@ -21,6 +23,141 @@ def percentile(xs: Sequence[float], q: float) -> float:
 
 def p99(xs: Sequence[float]) -> float:
     return percentile(xs, 99.0)
+
+
+# ---------------------------------------------------------------------------
+# Streaming quantiles (fleet SLO checks run every decision point; recomputing
+# np.percentile over growing history made sweep cost quadratic-ish in
+# completed requests — these are O(1) memory / O(1) or O(window) update)
+# ---------------------------------------------------------------------------
+
+
+class P2Quantile:
+    """Jain & Chlamtac's P² streaming quantile estimator.
+
+    Tracks a single quantile ``q`` with five markers updated in O(1) per
+    observation and O(1) memory — no stored history. Exact (same linear
+    interpolation as ``np.percentile``) while five or fewer observations
+    have been seen; a parabolic-interpolation estimate afterwards.
+    Accuracy against ``np.percentile`` on adversarial distributions is
+    pinned by ``tests/test_fast_path.py``.
+    """
+
+    __slots__ = ("q", "_n", "_heights", "_pos", "_want", "_inc")
+
+    def __init__(self, q: float = 0.99):
+        if not 0.0 < q < 1.0:
+            raise ValueError(f"quantile must be in (0, 1), got {q}")
+        self.q = q
+        self.reset()
+
+    def reset(self) -> None:
+        q = self.q
+        self._n = 0
+        self._heights: List[float] = []
+        self._pos = [1.0, 2.0, 3.0, 4.0, 5.0]
+        self._want = [1.0, 1.0 + 2.0 * q, 1.0 + 4.0 * q, 3.0 + 2.0 * q, 5.0]
+        self._inc = [0.0, q / 2.0, q, (1.0 + q) / 2.0, 1.0]
+
+    @property
+    def count(self) -> int:
+        return self._n
+
+    def add(self, x: float) -> None:
+        self._n += 1
+        h = self._heights
+        if self._n <= 5:
+            bisect.insort(h, float(x))
+            return
+        # locate the marker cell containing x, clamping the extremes
+        if x < h[0]:
+            h[0] = x
+            k = 0
+        elif x >= h[4]:
+            h[4] = x
+            k = 3
+        else:
+            k = 0
+            while k < 3 and x >= h[k + 1]:
+                k += 1
+        pos, want = self._pos, self._want
+        for i in range(k + 1, 5):
+            pos[i] += 1.0
+        for i in range(5):
+            want[i] += self._inc[i]
+        # nudge the three interior markers toward their desired positions
+        for i in (1, 2, 3):
+            d = want[i] - pos[i]
+            if (d >= 1.0 and pos[i + 1] - pos[i] > 1.0) or \
+                    (d <= -1.0 and pos[i - 1] - pos[i] < -1.0):
+                d = 1.0 if d >= 0 else -1.0
+                hp = self._parabolic(i, d)
+                if not h[i - 1] < hp < h[i + 1]:
+                    hp = self._linear(i, d)
+                h[i] = hp
+                pos[i] += d
+
+    def _parabolic(self, i: int, d: float) -> float:
+        h, n = self._heights, self._pos
+        return h[i] + d / (n[i + 1] - n[i - 1]) * (
+            (n[i] - n[i - 1] + d) * (h[i + 1] - h[i]) / (n[i + 1] - n[i])
+            + (n[i + 1] - n[i] - d) * (h[i] - h[i - 1]) / (n[i] - n[i - 1]))
+
+    def _linear(self, i: int, d: float) -> float:
+        h, n = self._heights, self._pos
+        j = i + int(d)
+        return h[i] + d * (h[j] - h[i]) / (n[j] - n[i])
+
+    def value(self) -> float:
+        """Current estimate of the tracked quantile (nan when empty)."""
+        if self._n == 0:
+            return float("nan")
+        if self._n <= 5:
+            return percentile(self._heights, 100.0 * self.q)
+        return self._heights[2]
+
+
+class WindowQuantile:
+    """Windowed quantile: exact up to ``capacity`` samples, P² beyond.
+
+    A fixed-size ring buffer holds the window; as long as it has not
+    overflowed, ``value()`` is the exact ``np.percentile`` over every
+    sample since the last ``reset()``. Once the window outgrows the ring,
+    the P² estimate (fed with every sample since reset) takes over. The
+    fleet's SLO checker uses this per device: windows near ``min_window``
+    stay exact (so migration decisions match full-history percentiles
+    bit for bit), while pathological windows cost O(1) anyway.
+    """
+
+    def __init__(self, q: float = 0.99, capacity: int = 256):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.q = q
+        self.capacity = capacity
+        self._ring = np.empty(capacity, dtype=np.float64)
+        self._n = 0
+        self._p2 = P2Quantile(q)
+
+    @property
+    def count(self) -> int:
+        return self._n
+
+    def add(self, x: float) -> None:
+        if self._n < self.capacity:      # once overflowed, value() reads
+            self._ring[self._n] = x      # only the P² estimate — skip the
+        self._n += 1                     # dead ring store
+        self._p2.add(x)
+
+    def value(self) -> float:
+        if self._n == 0:
+            return float("nan")
+        if self._n <= self.capacity:
+            return float(np.percentile(self._ring[:self._n], 100.0 * self.q))
+        return self._p2.value()
+
+    def reset(self) -> None:
+        self._n = 0
+        self._p2.reset()
 
 
 @dataclass
@@ -46,7 +183,11 @@ class LatencyStats:
         return float(np.mean(self.latencies)) if self.latencies else float("nan")
 
     def overhead_vs(self, ideal_p99: float) -> float:
-        """Fractional p99 overhead vs isolated execution (paper's headline)."""
+        """Fractional p99 overhead vs isolated execution (paper's headline).
+        Degenerate references (no isolated requests, zero/NaN p99) report
+        ``nan`` instead of raising or emitting ``inf``."""
+        if not ideal_p99 > 0.0 or not math.isfinite(ideal_p99):
+            return float("nan")
         return self.p99() / ideal_p99 - 1.0
 
 

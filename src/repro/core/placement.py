@@ -92,13 +92,27 @@ class LeastLoaded(PlacementPolicy):
         return best.index
 
 
+# process-wide memo for the profiler-backed interference signal: the
+# launch-config search is deterministic given (workload kernels, device,
+# bound), and fleet sweeps re-instantiate policies/estimators per scenario
+# while re-using the same named workloads — without this the
+# interference-aware policy re-ran the search per candidate per job per
+# scenario. Keyed by workload *name* (same caveat as TurnaroundEstimator:
+# names are assumed to identify kernel content).
+_ESTIMATE_MEMO: Dict[Tuple[str, str, float, int], float] = {}
+
+
 def estimate_turnaround(workload: Workload, dev: DeviceModel,
                         bound: float, max_kernels: int = 8) -> float:
     """Mean turnaround (s) of the workload's dominant kernels after Tally's
     launch-config search on ``dev`` — the profiler-backed interference
     signal. Long kernels dominate HP p99 disturbance, so only the
     ``max_kernels`` longest unique kernels are profiled (profile_runs=1:
-    the simulator's pricing is deterministic)."""
+    the simulator's pricing is deterministic). Memoized process-wide."""
+    key = (workload.name, dev.name, bound, max_kernels)
+    hit = _ESTIMATE_MEMO.get(key)
+    if hit is not None:
+        return hit
     # local import: simulator imports this module's sibling types
     from repro.core.simulator import make_measure
 
@@ -109,14 +123,18 @@ def estimate_turnaround(workload: Workload, dev: DeviceModel,
     top = sorted(uniq.values(), key=lambda k: k.duration(dev),
                  reverse=True)[:max_kernels]
     if not top:
+        _ESTIMATE_MEMO[key] = 0.0
         return 0.0
     prof = TransparentProfiler(make_measure(dev), dev.sm_count,
-                               turnaround_bound=bound, profile_runs=1)
+                               turnaround_bound=bound, profile_runs=1,
+                               deterministic=True)
     tas = []
     for k in top:
         prof.launch_and_profile(k)
         tas.append(prof.entry(k).turnaround)
-    return sum(tas) / len(tas)
+    out = sum(tas) / len(tas)
+    _ESTIMATE_MEMO[key] = out
+    return out
 
 
 class TurnaroundEstimator:

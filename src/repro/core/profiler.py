@@ -96,11 +96,16 @@ class TransparentProfiler:
                  measure: Callable[[object, LaunchConfig], ExecSample],
                  sm_count: int,
                  turnaround_bound: float = DEFAULT_TURNAROUND_BOUND,
-                 profile_runs: int = PROFILE_RUNS):
+                 profile_runs: int = PROFILE_RUNS,
+                 deterministic: bool = False):
         self._measure = measure
         self.sm_count = sm_count
         self.bound = turnaround_bound
         self.runs = profile_runs
+        # a deterministic measure (device-model pricing) returns the same
+        # sample every run, so one measurement IS the N-run average; the
+        # profile_time ledger still charges all N runs
+        self.deterministic = deterministic
         self._cache: Dict[Tuple, ProfileEntry] = {}
         self._measurements: Dict[Tuple, Dict[LaunchConfig, ExecSample]] = {}
         self.profile_time = 0.0          # accounting (overhead analysis)
@@ -118,10 +123,13 @@ class TransparentProfiler:
         return self._measurements.get(self._work_key(kernel), {}).get(cfg)
 
     def profile(self, kernel, cfg: LaunchConfig) -> ExecSample:
-        samples = [self._measure(kernel, cfg) for _ in range(self.runs)]
-        avg = ExecSample(
-            exec_time=sum(s.exec_time for s in samples) / len(samples),
-            turnaround=sum(s.turnaround for s in samples) / len(samples))
+        if self.deterministic:
+            avg = self._measure(kernel, cfg)
+        else:
+            samples = [self._measure(kernel, cfg) for _ in range(self.runs)]
+            avg = ExecSample(
+                exec_time=sum(s.exec_time for s in samples) / len(samples),
+                turnaround=sum(s.turnaround for s in samples) / len(samples))
         self._measurements.setdefault(self._work_key(kernel), {})[cfg] = avg
         self.profile_time += avg.exec_time * self.runs
         return avg

@@ -31,8 +31,11 @@ from __future__ import annotations
 import heapq
 import itertools
 import math
+from collections import deque
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
+
+import numpy as np
 
 from repro.core.device_model import A100, DeviceModel
 from repro.core.metrics import LatencyStats, RunResult, ThroughputStats
@@ -89,11 +92,28 @@ def price_launch(k: SimKernel, cfg: LaunchConfig, dev: DeviceModel,
     raise ValueError(cfg.mode)
 
 
+# process-wide pricing memo: the analytical measure is a pure function of
+# (device, kernel work-shape, config), but every DeviceEngine owns a fresh
+# profiler — without this, fleet sweeps re-price the same candidate grid
+# once per device per scenario. Keyed by value (DeviceModel is frozen), so
+# identical kernels across workload re-synthesis still hit.
+_PRICE_MEMO: Dict[Tuple, ExecSample] = {}
+_PRICE_MEMO_CAP = 1_000_000
+
+
 def make_measure(dev: DeviceModel) -> Callable[[SimKernel, LaunchConfig],
                                                ExecSample]:
     def measure(kernel: SimKernel, cfg: LaunchConfig) -> ExecSample:
-        t, ta = price_launch(kernel, cfg, dev)
-        return ExecSample(exec_time=t, turnaround=ta)
+        key = (dev, kernel.name, kernel.blocks, kernel.flops, kernel.bytes,
+               cfg.mode, cfg.param)
+        s = _PRICE_MEMO.get(key)
+        if s is None:
+            if len(_PRICE_MEMO) >= _PRICE_MEMO_CAP:
+                _PRICE_MEMO.clear()
+            t, ta = price_launch(kernel, cfg, dev)
+            s = ExecSample(exec_time=t, turnaround=ta)
+            _PRICE_MEMO[key] = s
+        return s
     return measure
 
 
@@ -179,6 +199,7 @@ class SimExecutor:
         self.hp_client = hp_client
         self.samples_per_request = samples_per_request
         self.events: List[Tuple[float, int, int, Any]] = []
+        self._arr_heap: List[float] = []     # mirror of queued ARRIVAL times
         self._seq = itertools.count()
         self._launch_ids = itertools.count()
         self.inflight: Optional[_Inflight] = None
@@ -192,6 +213,8 @@ class SimExecutor:
 
     def _push(self, t: float, kind: int, payload: Any) -> None:
         heapq.heappush(self.events, (t, next(self._seq), kind, payload))
+        if kind == ARRIVAL:
+            heapq.heappush(self._arr_heap, t)
 
     def now(self) -> float:
         return self.clock
@@ -199,6 +222,12 @@ class SimExecutor:
     def next_event_time(self) -> Optional[float]:
         """Timestamp of the earliest queued event (None when idle)."""
         return self.events[0][0] if self.events else None
+
+    def next_arrival_time(self) -> float:
+        """Earliest queued HP request arrival (inf when none). The mirror
+        heap lets the fast path gate BE launches on pending arrivals
+        without scanning the main event heap."""
+        return self._arr_heap[0] if self._arr_heap else math.inf
 
     def device_busy(self) -> bool:
         return self.inflight is not None
@@ -306,6 +335,8 @@ class SimExecutor:
     def wait(self) -> bool:
         while self.events:
             t, _, kind, payload = heapq.heappop(self.events)
+            if kind == ARRIVAL:
+                heapq.heappop(self._arr_heap)
             if t > self.duration and kind == ARRIVAL:
                 continue
             self.clock = max(self.clock, t)
@@ -360,6 +391,485 @@ class SimExecutor:
         return False
 
 
+_FF_DID, _FF_BAIL, _FF_IDLE = 0, 1, 2
+
+
+class _FastForward:
+    """Batched fast path over the reference event loop (same schedule).
+
+    Between scheduler gate changes the reference engine's outcome is fully
+    determined: while the HP client has queued work nothing else may run,
+    and while no HP arrival is pending a BE launch runs to completion
+    untouched. Inside those windows this class retires whole HP requests
+    in closed form (one sequential ``np.cumsum`` per request — bit-exact
+    with the per-kernel ``clock += dur`` fold) and whole BE launches one
+    step each (memoized pricing, no heap traffic, no ``_Inflight``). At
+    every point where the gate COULD change — an HP arrival due before a
+    BE launch completes, a launch crossing the advance horizon, an
+    in-flight launch left by a strict segment — it restores slow-visible
+    state and hands control to the unmodified ``TallyScheduler.run`` /
+    ``SimExecutor.wait`` machinery for exactly one step.
+
+    Two pieces of state are deferred while fast-forwarding and flushed
+    before any reference-engine step runs (``_flush``):
+
+      * **request backlog** — absorbed HP arrivals held as ``(rid,
+        kernels)`` payloads so whole requests retire via one cumsum; they
+        materialize into ``PendingKernel``s (exactly what ``wait`` builds)
+        the moment the slow path might look at the client queue;
+      * **pending gap timers** — host-gap wake-ups held in a list instead
+        of the event heap (the fast loop reads ``not_ready_until``
+        directly); pushed as real TIMER events on exit so a slow segment
+        wakes identically.
+
+    The contract is exact equivalence: a fast run produces bit-for-bit
+    the same schedule, books, and busy-time accounting as the reference
+    engine (``tests/test_fast_path.py``). Invariants the replay relies on:
+
+      * completion clocks are left-to-right float folds (``clock += dur``),
+        reproduced with sequential ``np.cumsum``;
+      * heap ties break by push order (arrivals are pushed at attach, so
+        an arrival always pops before a completion/timer at the same
+        time, and everything in the heap predates pending-list timers);
+      * stale COMPLETE events only exist for launches made by the
+        reference machinery, so fast and slow runs see identical stales;
+      * ``launch_be`` pricing is replicated verbatim (including the
+        ``+overhead-overhead`` slice arithmetic) and memoized per
+        (kernel, config, remaining).
+    """
+
+    def __init__(self, engine: "DeviceEngine"):
+        self.eng = engine
+        self.ex = engine.ex
+        self.sched = engine.sched
+        self.dev = engine.dev
+        self._durs: Dict[int, float] = {}          # id(kernel) -> duration
+        self._req_plans: Dict[int, np.ndarray] = {}  # id(list) -> durations
+        # id(first kernel) -> (kernel list, durations) | False: recognizes
+        # whole requests at the head of a materialized client queue (False
+        # = ambiguous head, never batch)
+        self._req_head: Dict[int, Any] = {}
+        self._cfgs: Dict[int, LaunchConfig] = {}   # id(kernel) -> config
+        self._price: Dict[Tuple, Tuple[float, int]] = {}  # launch pricing
+        self._tput: Dict[int, Tuple[Any, float]] = {}     # id(client) -> acc
+        self._pins: Dict[int, Any] = {}            # keep ids stable
+        self._backlog: Deque[Tuple[int, List[SimKernel]]] = deque()
+        self._timers: List[float] = []             # pending gap wake-ups
+        self._tmin = math.inf
+
+    # -- memoized pricing ------------------------------------------------------
+
+    def _duration(self, k: SimKernel) -> float:
+        d = self._durs.get(id(k))
+        if d is None:
+            d = k.duration(self.dev)
+            self._durs[id(k)] = d
+            self._pins[id(k)] = k
+        return d
+
+    def _request_durs(self, kernels: List[SimKernel]) -> np.ndarray:
+        arr = self._req_plans.get(id(kernels))
+        if arr is None:
+            n = len(kernels)
+            flops = np.fromiter((k.flops for k in kernels), np.float64, n)
+            byts = np.fromiter((k.bytes for k in kernels), np.float64, n)
+            blocks = np.fromiter((k.blocks for k in kernels), np.int64, n)
+            arr = self.dev.kernel_times(flops, byts, blocks)
+            self._req_plans[id(kernels)] = arr
+            self._pins[id(kernels)] = kernels
+            # register for head-of-queue recognition; a first-kernel shared
+            # by two DIFFERENT lists (per-request list construction with
+            # object reuse) poisons the entry instead — batching then
+            # simply never applies to that head
+            head = id(kernels[0])
+            prior = self._req_head.get(head)
+            if prior is None:
+                self._req_head[head] = (kernels, arr)
+            elif prior is not False and prior[0] is not kernels:
+                self._req_head[head] = False
+        return arr
+
+    def _config(self, k: SimKernel) -> LaunchConfig:
+        cfg = self._cfgs.get(id(k))
+        if cfg is None:
+            cfg = self.sched._config_for(k)   # may profile (same point the
+            self._cfgs[id(k)] = cfg           # reference engine would)
+            self._pins[id(k)] = k
+        return cfg
+
+    def _be_price(self, k: SimKernel, cfg: LaunchConfig,
+                  remaining: int) -> Tuple[float, int]:
+        """(launch time, tasks retired) — ``SimExecutor.launch_be`` verbatim
+        for the un-preempted case (the only one the fast path retires)."""
+        key = (id(k), cfg.mode, cfg.param, remaining)
+        hit = self._price.get(key)
+        if hit is None:
+            dev = self.dev
+            if cfg.mode == "slice":
+                s = max(1, math.ceil(k.blocks / cfg.param))
+                chunk = min(s, remaining)
+                t, _ = price_launch(k, DEFAULT, dev, remaining=chunk)
+                t = (t - dev.launch_overhead) * (
+                    1 + dev.slice_body_overhead) + dev.launch_overhead
+                hit = (t, chunk)
+            elif cfg.mode == "preempt":
+                t, _ = price_launch(k, cfg, dev, remaining=remaining)
+                hit = (t, remaining)
+            else:
+                t, _ = price_launch(k, DEFAULT, dev, remaining=remaining)
+                hit = (t, remaining)
+            self._price[key] = hit
+            self._pins[id(k)] = k
+        return hit
+
+    # -- deferred state --------------------------------------------------------
+
+    def _flush(self) -> None:
+        """Materialize fast-only state so the reference machinery (and the
+        fleet layer between advances) sees exactly what a slow run would:
+        backlog payloads become queued ``PendingKernel``s, pending gap
+        timers become heap TIMER events (in creation order, preserving
+        tie-break behaviour)."""
+        ex = self.ex
+        if self._backlog:
+            hp = ex.hp_client
+            q = hp.queue
+            while self._backlog:
+                rid, kernels = self._backlog.popleft()
+                n = len(kernels)
+                for i, k in enumerate(kernels):
+                    q.append(PendingKernel(
+                        k, request_id=rid, last_of_request=(i == n - 1)))
+        if self._timers:
+            for t in self._timers:
+                ex._push(t, TIMER, None)
+            self._timers.clear()
+            self._tmin = math.inf
+
+    def _push_timer(self, t: float) -> None:
+        self._timers.append(t)
+        if t < self._tmin:
+            self._tmin = t
+
+    def _drop_timers(self, end: float) -> None:
+        """Discard pending wake-ups due while a launch is in flight (the
+        reference loop pops them mid-flight to no effect)."""
+        self._timers = [t for t in self._timers if t > end]
+        self._tmin = min(self._timers, default=math.inf)
+
+    # -- main loop -------------------------------------------------------------
+
+    def run(self, until: float, *, strict: bool = False) -> None:
+        """Hybrid drive loop: fast-forward while provably safe, otherwise
+        take exactly one reference-engine step (``TallyScheduler.run``
+        body) and retry."""
+        ex, sched = self.ex, self.sched
+        while ex.clock < until:
+            try:
+                self._forward(until, strict)
+            finally:
+                self._flush()
+            if ex.clock >= until:
+                break
+            if sched.schedule_once():
+                continue
+            if strict:
+                nxt = ex.next_event_time()
+                if nxt is None or nxt > until:
+                    break
+            if not ex.wait():
+                break
+
+    def _forward(self, until: float, strict: bool) -> None:
+        ex = self.ex
+        hp = ex.hp_client
+        bes: List[Client] = []
+        for c in self.sched.clients:     # engine shape: at most one HP
+            if c.is_high_priority:
+                if c is not hp:
+                    return
+            else:
+                bes.append(c)
+        backlog = self._backlog
+        while ex.clock < until:
+            if ex.inflight is not None:
+                return                     # reference machinery owns drains
+            if hp is not None:
+                if hp.kernel_running:
+                    return                 # defensive: cannot happen
+                if hp.queue:
+                    if not self._hp_drain(until):
+                        return             # horizon-crossing launch
+                    continue
+                if backlog:
+                    if not self._hp_backlog_step(until):
+                        return             # horizon-crossing request
+                    continue
+            r = self._be_step(bes, until)
+            if r == _FF_DID:
+                continue
+            if r == _FF_BAIL:
+                return
+            if not self._absorb_next(until, strict):
+                return
+
+    # -- HP: whole-request retirement + per-kernel drain -----------------------
+
+    def _hp_backlog_step(self, until: float) -> bool:
+        """Retire the oldest backlogged request in closed form. False when
+        it would cross ``until`` (flush + reference path take over)."""
+        ex = self.ex
+        rid, kernels = self._backlog[0]
+        if not kernels:
+            self._backlog.popleft()        # empty request: arrival was the
+            return True                    # only observable effect
+        durs = self._request_durs(kernels)
+        end = float(_fold(ex.clock, durs)[-1])
+        if end >= until:
+            return False
+        self._backlog.popleft()
+        events = ex.events
+        while events and events[0][0] <= end:
+            self._absorb_in_flight()
+        if self._tmin <= end:
+            self._drop_timers(end)
+        ex.hp_busy_time = float(_fold(ex.hp_busy_time, durs)[-1])
+        ex.clock = end
+        ex.book.request_done(rid, end, ex.samples_per_request)
+        return True
+
+    def _hp_drain(self, until: float) -> bool:
+        """Retire materialized HP kernels one ``+= dur`` at a time (no
+        heap, no scheduler pass). False when the next launch would cross
+        ``until`` — the reference loop owns horizon/strict semantics."""
+        ex = self.ex
+        q = ex.hp_client.queue
+        events = ex.events
+        book = ex.book
+        spr = ex.samples_per_request
+        clock = ex.clock
+        busy = ex.hp_busy_time
+        while q:
+            if clock >= until:
+                break
+            pk = q[0]
+            # whole-request batching: when the head of the queue is the
+            # first kernel of a known request plan and the full request
+            # (same rid contiguous through its last kernel) completes
+            # inside the window, retire it with one cumsum. Requests are
+            # appended atomically, so rid-match at positions 0 and n-1
+            # plus the last-of-request flag proves contiguity.
+            plan = self._req_head.get(id(pk.kernel))
+            if plan is not None and plan is not False:
+                kernels, durs = plan
+                n = len(kernels)
+                if len(q) >= n:
+                    tail = q[n - 1]
+                    if (tail.last_of_request
+                            and tail.request_id == pk.request_id
+                            and tail.kernel is kernels[-1]):
+                        end = float(_fold(clock, durs)[-1])
+                        if end < until:
+                            while events and events[0][0] <= end:
+                                self._absorb_in_flight()
+                            if self._tmin <= end:
+                                self._drop_timers(end)
+                            for _ in range(n):
+                                q.popleft()
+                            clock = end
+                            busy = float(_fold(busy, durs)[-1])
+                            book.request_done(tail.request_id, clock, spr)
+                            continue
+            dur = self._duration(pk.kernel)
+            end = clock + dur
+            if end >= until:
+                ex.clock = clock
+                ex.hp_busy_time = busy
+                return False
+            while events and events[0][0] <= end:
+                self._absorb_in_flight()
+            if self._tmin <= end:
+                self._drop_timers(end)
+            q.popleft()
+            clock = end
+            busy = busy + dur
+            if pk.last_of_request:
+                book.request_done(pk.request_id, clock, spr)
+        ex.clock = clock
+        ex.hp_busy_time = busy
+        return True
+
+    # -- BE: one launch per step, retired inline -------------------------------
+
+    def _be_step(self, bes: List[Client], until: float) -> int:
+        ex = self.ex
+        now = ex.clock
+        # earliest wake-up among gap-blocked clients scanned BEFORE the
+        # launching one: when it fires, the scheduler's next decision
+        # prefers that client, so slice batches must not run past it
+        wake_bound = math.inf
+        for c in bes:
+            if c.not_ready_until > now:
+                if c.not_ready_until < wake_bound:
+                    wake_bound = c.not_ready_until
+                continue
+            prog = c.current
+            if prog is None:
+                q = c.queue
+                if not q:
+                    c.refill_training()
+                    if not q:
+                        continue
+                pk0 = q[0]                 # peek; popped only on commit
+                k = pk0.kernel
+                remaining = (pk0.progress.remaining
+                             if pk0.progress is not None else k.blocks)
+            else:
+                k = prog.pending.kernel
+                remaining = prog.remaining
+            cfg = self._config(k)
+            t, done = self._be_price(k, cfg, remaining)
+            end = now + t
+            if end >= until:
+                return _FF_BAIL            # horizon: reference loop owns it
+            if cfg.mode == "preempt" and end >= ex.next_arrival_time():
+                # an HP arrival mid-flight truncates a preempt-mode launch
+                # (drain semantics) — only the reference machinery replays
+                # that. Slice/default launches are non-preemptible
+                # ("let them run out"), so arrivals merely queue behind
+                # them and the fast path absorbs those into the backlog.
+                return _FF_BAIL
+            if prog is None:
+                pk = c.fetch_next_kernel()
+                prog = pk.progress if pk.progress is not None \
+                    else BEProgress(pk)
+                c.current = prog
+            if cfg.mode == "slice":
+                # batch consecutive full slices of this kernel: every full
+                # slice launches with the same duration `t` (pricing
+                # depends only on the chunk), so their completion clocks
+                # are one sequential fold. The finishing slice (and any
+                # trailing partial) stays on the single-launch path for
+                # iteration/gap bookkeeping.
+                chunk = done
+                n_batch = remaining // chunk
+                if remaining % chunk == 0:
+                    n_batch -= 1
+                if n_batch >= 2:
+                    bound = until
+                    na = ex.next_arrival_time()
+                    if na < bound:
+                        bound = na
+                    if wake_bound < bound:
+                        bound = wake_bound
+                    folds = _fold(now, np.full(n_batch, t))
+                    j = int(np.searchsorted(folds, bound, "left")) - 1
+                    if j >= 2:
+                        end = float(folds[j])
+                        events = ex.events
+                        while events and events[0][0] <= end:
+                            self._absorb_in_flight()
+                        if self._tmin <= end:
+                            self._drop_timers(end)
+                        ex.clock = end
+                        diffs = np.diff(folds[:j + 1])
+                        ex.be_busy_time = float(
+                            _fold(ex.be_busy_time, diffs)[-1])
+                        prog.watermark += j * chunk
+                        return _FF_DID
+            events = ex.events
+            while events and events[0][0] <= end:
+                self._absorb_in_flight()   # arrivals -> backlog; timers,
+                #                            stales: no mid-flight effect
+            if self._tmin <= end:
+                self._drop_timers(end)
+            ex.clock = end
+            ex.be_busy_time += end - now
+            # inline ``on_be_complete`` + ``Bookkeeper.iteration_done``
+            wm = prog.watermark + done
+            prog.watermark = wm
+            if prog.pending.kernel.blocks - wm <= 0:
+                c.current = None
+                if prog.pending.last_of_iteration:
+                    c.iterations_done += 1
+                wl = c.workload
+                rec = self._tput.get(id(c))
+                if rec is None:
+                    tput = ex.book.be_tput.setdefault(
+                        c.name, ThroughputStats(span=ex.book.duration))
+                    rec = (tput, wl.samples_per_kernel)
+                    self._tput[id(c)] = rec
+                    self._pins[id(c)] = c
+                tput, spk = rec
+                tput.samples += spk
+                if wl.host_gap > 0:
+                    wake = end + wl.host_gap
+                    c.not_ready_until = wake
+                    self._push_timer(wake)
+            return _FF_DID
+        return _FF_IDLE
+
+    # -- event absorption (mirrors ``SimExecutor.wait`` branch by branch) ------
+
+    def _absorb_in_flight(self) -> None:
+        """Pop one heap event that would fire while a fast-retired launch
+        is in flight. Arrivals join the request backlog (they run after
+        everything already queued); timers and stale completions have no
+        effect mid-flight."""
+        ex = self.ex
+        t, _, kind, payload = heapq.heappop(ex.events)
+        if kind == ARRIVAL:
+            heapq.heappop(ex._arr_heap)
+            if t > ex.duration:
+                return
+            ex.book.arrival(payload[0], t)
+            self._backlog.append(payload)
+
+    def _absorb_next(self, until: float, strict: bool) -> bool:
+        """Device idle: consume the next event (heap or pending timer)
+        like one ``wait()`` call. False when the reference loop should
+        take over (strict boundary or fully drained)."""
+        ex = self.ex
+        events = ex.events
+        while True:
+            he = events[0][0] if events else math.inf
+            if he <= self._tmin:           # heap entries predate pending
+                if he is math.inf:         # timers, so ties pop heap-first
+                    return False
+                if strict and he > until:
+                    return False
+                t, _, kind, payload = heapq.heappop(events)
+                if kind == ARRIVAL:
+                    heapq.heappop(ex._arr_heap)
+                    if t > ex.duration:
+                        continue           # silent skip, no clock motion
+                    ex.clock = max(ex.clock, t)
+                    ex.book.arrival(payload[0], t)
+                    self._backlog.append(payload)
+                    return True
+                ex.clock = max(ex.clock, t)
+                if kind == TIMER:
+                    return True
+                continue   # stale COMPLETE: keep popping (wait's behaviour)
+            wake = self._tmin
+            if strict and wake > until:
+                return False
+            self._timers.remove(wake)
+            self._tmin = min(self._timers, default=math.inf)
+            ex.clock = max(ex.clock, wake)
+            return True
+
+
+def _fold(start: float, durs: np.ndarray) -> np.ndarray:
+    """Left-to-right float fold ``start (+ d0) (+ d1) ...`` — ``np.cumsum``
+    accumulates sequentially, so this is bit-identical to the reference
+    engine's per-event ``clock += dur``."""
+    out = np.empty(len(durs) + 1)
+    out[0] = start
+    out[1:] = durs
+    return np.cumsum(out, out=out)
+
+
 class DeviceEngine:
     """One resumable simulated GPU: executor + scheduler + bookkeeping.
 
@@ -374,17 +884,20 @@ class DeviceEngine:
 
     def __init__(self, dev: DeviceModel = A100, duration: float = 60.0,
                  threshold: float = 0.0316e-3, *,
-                 transforms_enabled: bool = True):
+                 transforms_enabled: bool = True, fast: bool = True):
         self.dev = dev
         self.duration = duration
         self.book = Bookkeeper(duration)
         self.ex = SimExecutor(dev, None, [], self.book, duration,
                               samples_per_request=1.0)
         self.profiler = TransparentProfiler(make_measure(dev), dev.sm_count,
-                                            turnaround_bound=threshold)
+                                            turnaround_bound=threshold,
+                                            deterministic=True)
         self.sched = TallyScheduler([], self.profiler, self.ex,
                                     transforms_enabled=transforms_enabled)
         self.ex.scheduler = self.sched
+        self.fast = fast
+        self._ff = _FastForward(self) if fast else None
         self.hp_client: Optional[Client] = None
         self.be_clients: List[Client] = []
 
@@ -443,10 +956,36 @@ class DeviceEngine:
         (or the device goes fully idle), then align the clock so load
         estimates at fleet decision points use a common elapsed time.
         ``strict`` stops exactly at ``until`` without consuming later
-        events (fleet decision points; see ``TallyScheduler.run``)."""
+        events (fleet decision points; see ``TallyScheduler.run``).
+
+        A quiescent device (nothing in flight, no queued events, no client
+        that could ever launch) skips ahead analytically — its per-device
+        event horizon is infinite, so the fleet's lockstep segments cost
+        O(1) instead of a full scheduler pass per decision point."""
         until = min(until, self.duration)
-        self.sched.run(until, strict=strict)
+        if self._quiescent():
+            self.ex.clock = max(self.ex.clock, until)
+            return
+        if self._ff is not None:
+            self._ff.run(until, strict=strict)
+        else:
+            self.sched.run(until, strict=strict)
         self.ex.clock = max(self.ex.clock, until)
+
+    def _quiescent(self) -> bool:
+        """True when no event can ever fire again without a new attach:
+        nothing in flight, empty event heap (no arrivals/timers), and no
+        client with pending or refillable work. Advancing such a device is
+        exactly ``clock = until`` in the reference engine too."""
+        ex = self.ex
+        if ex.inflight is not None or ex.events:
+            return False
+        for c in self.sched.clients:
+            if c.queue or c.kernel_running or c.current is not None:
+                return False
+            if not c.is_high_priority and c.workload.kind == "train":
+                return False                 # training refills endlessly
+        return True
 
     def finalize(self) -> Bookkeeper:
         self.book.meta = {"profiled_kernels": self.profiler.profiled_kernels,
@@ -465,9 +1004,10 @@ class DeviceEngine:
 
 def _run_priority(policy: str, hp: Optional[Workload], bes: List[Workload],
                   trace: Optional[TrafficTrace], dev: DeviceModel,
-                  duration: float, threshold: float) -> Bookkeeper:
+                  duration: float, threshold: float,
+                  fast: bool = True) -> Bookkeeper:
     eng = DeviceEngine(dev, duration, threshold,
-                       transforms_enabled=(policy == "tally"))
+                       transforms_enabled=(policy == "tally"), fast=fast)
     if hp is not None:
         eng.attach_hp(hp, trace)
     for w in bes:
@@ -796,9 +1336,13 @@ def _run_timeslice(hp: Optional[Workload], bes: List[Workload],
 def simulate(policy: str, hp: Optional[Workload], bes: List[Workload],
              trace: Optional[TrafficTrace], dev: DeviceModel = A100,
              duration: float = 60.0,
-             threshold: float = 0.0316e-3) -> Bookkeeper:
+             threshold: float = 0.0316e-3, fast: bool = True) -> Bookkeeper:
+    """``fast=False`` forces the reference per-kernel event loop for the
+    priority engines (equivalence tests, perf baselines); the fluid/TGS/
+    time-slicing engines have a single implementation either way."""
     if policy in ("tally", "tally_kernel"):
-        return _run_priority(policy, hp, bes, trace, dev, duration, threshold)
+        return _run_priority(policy, hp, bes, trace, dev, duration,
+                             threshold, fast=fast)
     if policy in ("no_sched", "mps", "mps_priority"):
         return _run_concurrent(policy, hp, bes, trace, dev, duration)
     if policy == "tgs":
@@ -810,11 +1354,13 @@ def simulate(policy: str, hp: Optional[Workload], bes: List[Workload],
 
 def run_policy(policy: str, hp: Workload, bes: List[Workload],
                trace: TrafficTrace, dev: DeviceModel = A100,
-               duration: float = 60.0, threshold: float = 0.0316e-3
-               ) -> RunResult:
+               duration: float = 60.0, threshold: float = 0.0316e-3,
+               fast: bool = True) -> RunResult:
     """Co-execution run + isolated references -> RunResult."""
-    book = simulate(policy, hp, bes, trace, dev, duration, threshold)
-    iso = simulate("tally", hp, [], trace, dev, duration, threshold)
+    book = simulate(policy, hp, bes, trace, dev, duration, threshold,
+                    fast=fast)
+    iso = simulate("tally", hp, [], trace, dev, duration, threshold,
+                   fast=fast)
     be_iso = {w.name: w.samples_per_iteration /
               (w.iteration_time or isolated_time(w, dev)) for w in bes}
     return RunResult(

@@ -57,12 +57,16 @@ def maf2_like_trace(duration: float = 600.0, mean_rate: float = 50.0,
     sigma = np.log(max(burstiness, 1.001)) / 2.0
     levels = rng.lognormal(mean=-0.5 * sigma ** 2, sigma=sigma, size=n_levels)
     levels *= mean_rate / max(levels.mean(), 1e-12)
-    arrivals: List[float] = []
+    # one rng draw pair per level (stream order is part of the trace
+    # contract: same seed -> same arrivals), but arrivals stay as numpy
+    # blocks and concatenate once — no per-arrival Python floats
+    chunks: List[np.ndarray] = []
     for i, lam in enumerate(levels):
-        t0 = i * level_period
         n = rng.poisson(lam * level_period)
-        arrivals.extend(t0 + rng.uniform(0.0, level_period, size=n))
-    arr = np.sort(np.asarray(arrivals, dtype=np.float64))
+        chunks.append(i * level_period
+                      + rng.uniform(0.0, level_period, size=n))
+    arr = (np.sort(np.concatenate(chunks)) if chunks
+           else np.empty(0, dtype=np.float64))
     arr = arr[arr < duration]
     return TrafficTrace(arr, duration)
 

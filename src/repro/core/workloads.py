@@ -23,7 +23,7 @@ replays on A100 (paper comparison) or TPU v5e (deployment target).
 from __future__ import annotations
 
 import zlib
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
 import numpy as np
@@ -57,6 +57,8 @@ class Workload:
     n_kernels: int = 1                   # kernels per iteration/request
     host_gap: float = 0.0                # host-side gap after each kernel
     iteration_time: float = 0.0          # isolated wall time per iteration
+    _iso_cache: Dict[str, float] = field(default_factory=dict, repr=False,
+                                         compare=False)
 
     @property
     def is_high_priority(self) -> bool:
@@ -93,21 +95,19 @@ def _mk_kernels(rng: np.random.Generator, total_time: float, n_kernels: int,
     body_total = total_time - n_kernels * dev.launch_overhead
     body_total = max(body_total, 0.1 * total_time)
     w *= body_total / w.sum()
-    kernels = []
-    for i, dur in enumerate(w):
-        # block calibration: long kernels retire SM waves every ~304us
-        # (paper Table 1: Whisper block-level turnaround); a block therefore
-        # occupies its SM slot for dur/n_waves <= ~304us. Short kernels get
-        # proportionally fewer blocks than SMs (partial occupancy).
-        blocks = max(1, int(round(dur / 304e-6 * dev.sm_count)))
-        # calibrate so the device-model duration (incl. its occupancy
-        # derating for blocks < #SM) equals the target `dur`
-        eff = min(1.0, blocks / dev.sm_count)
-        flops = dur * dev.peak_flops * eff
-        bytes_ = dur * dev.hbm_bw
-        kernels.append(SimKernel(f"{prefix}/k{i}", float(flops),
-                                 float(bytes_), int(blocks)))
-    return kernels
+    # block calibration: long kernels retire SM waves every ~304us (paper
+    # Table 1: Whisper block-level turnaround); a block therefore occupies
+    # its SM slot for dur/n_waves <= ~304us. Short kernels get
+    # proportionally fewer blocks than SMs (partial occupancy). Flops/bytes
+    # are then set so the device-model duration (incl. its occupancy
+    # derating for blocks < #SM) equals the target duration. Vectorized:
+    # identical arithmetic to the per-kernel scalar loop, element-wise.
+    blocks = np.maximum(1, np.round(w / 304e-6 * dev.sm_count)).astype(int)
+    eff = np.minimum(1.0, blocks / dev.sm_count)
+    flops = w * dev.peak_flops * eff
+    bytes_ = w * dev.hbm_bw
+    return [SimKernel(f"{prefix}/k{i}", float(f), float(b), int(bl))
+            for i, (f, b, bl) in enumerate(zip(flops, bytes_, blocks))]
 
 
 @dataclass(frozen=True)
@@ -179,9 +179,25 @@ def paper_workload(name: str, priority: int, dev: DeviceModel = A100,
 
 
 def isolated_time(w: Workload, dev: DeviceModel) -> float:
-    """Isolated wall time of one iteration/request (the 'ideal')."""
-    busy = sum(k.duration(dev) for k in w.iteration(0))
-    return busy + w.host_gap * w.n_kernels
+    """Isolated wall time of one iteration/request (the 'ideal').
+    Vectorized over the kernel list and memoized per device on the
+    workload (benchmark sweeps and the fleet's trace/normalization
+    plumbing call this constantly with identical arguments)."""
+    cached = w._iso_cache.get(dev.name)
+    if cached is None:
+        kernels = w.iteration(0)
+        n = len(kernels)
+        durs = dev.kernel_times(
+            np.fromiter((k.flops for k in kernels), np.float64, n),
+            np.fromiter((k.bytes for k in kernels), np.float64, n),
+            np.fromiter((k.blocks for k in kernels), np.int64, n))
+        # sequential accumulation (cumsum), NOT durs.sum(): pairwise
+        # summation shifts the result by ulps vs the pre-vectorization
+        # Python fold, and this value feeds trace scaling everywhere
+        busy = float(np.cumsum(durs)[-1]) if n else 0.0
+        cached = busy + w.host_gap * w.n_kernels
+        w._iso_cache[dev.name] = cached
+    return cached
 
 
 # ---------------------------------------------------------------------------

@@ -222,18 +222,23 @@ def test_strict_advance_stops_at_boundary():
 
 
 def test_slo_window_accumulates_below_min():
-    """Sub-min_window latency batches accumulate instead of being dropped,
-    so low-rate services still become checkable."""
+    """Sub-min_window latency batches accumulate in the streaming window
+    instead of being dropped, so low-rate services still become checkable;
+    consuming the window resets it."""
     from repro.core.fleet import ManagedDevice
     from repro.core.simulator import DeviceEngine
     d = ManagedDevice(0, DeviceEngine(A100, duration=10.0))
     book = d.engine.book
     for x in (0.1, 0.2):
         book.latency.record(x)
-    assert len(d.window_latencies(min_window=3)) == 2   # peeked, not consumed
+    d.feed_window()
+    assert d.window.count == 2                  # accumulated, not checkable
     book.latency.record(0.3)
-    assert len(d.window_latencies(min_window=3)) == 3   # now consumed
-    assert d.window_latencies(min_window=3) == []
+    d.feed_window()
+    assert d.window.count == 3                  # checkable now
+    assert d.window_p99() == pytest.approx(np.percentile([0.1, 0.2, 0.3], 99))
+    d.consume_window()
+    assert d.window.count == 0                  # consumed on evaluation
 
 
 def test_run_is_single_use():

@@ -79,6 +79,7 @@ def test_mamba2_scan_sweep(B, S, NH, HD, DS, chunk, dtype):
                                atol=5e-1 if dtype == jnp.bfloat16 else 1e-3)
 
 
+@pytest.mark.slow
 def test_model_pallas_path_matches_xla():
     """cfg.use_pallas routes attention+mlp+ssd through kernels; logits must
     match the XLA path (the cuBLAS->CUTLASS swap must be semantically

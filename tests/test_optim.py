@@ -26,6 +26,7 @@ def test_adamw_converges_quadratic():
     assert _quadratic(params) < 1e-2
 
 
+@pytest.mark.slow
 def test_adafactor_converges_quadratic():
     params = {"w": jnp.zeros((8, 4)), "b": jnp.zeros((4,))}
     state = adafactor_init(params)

@@ -105,8 +105,8 @@ def test_price_launch_preempt_eq1():
 def whisper_runs():
     hp = paper_workload("bert-infer", 0)
     be = paper_workload("whisper-train", 1)
-    trace = _trace("bert-infer")
-    return {p: run_policy(p, hp, [be], trace, A100, duration=30.0)
+    trace = _trace("bert-infer", duration=12.0)
+    return {p: run_policy(p, hp, [be], trace, A100, duration=12.0)
             for p in ("tally", "tally_kernel", "tgs", "mps")}
 
 
@@ -136,9 +136,9 @@ def test_tally_preserves_be_throughput(whisper_runs):
 def test_all_policies_run():
     hp = paper_workload("bert-infer", 0)
     be = paper_workload("gpt2-train", 1)
-    trace = _trace("bert-infer", duration=10.0)
+    trace = _trace("bert-infer", duration=4.0)
     for p in POLICIES:
-        res = run_policy(p, hp, [be], trace, A100, duration=10.0)
+        res = run_policy(p, hp, [be], trace, A100, duration=4.0)
         assert res.hp_latency.count > 50
         assert np.isfinite(res.hp_latency.p99())
 
@@ -156,10 +156,10 @@ def test_threshold_tradeoff_direction():
     """Higher turnaround threshold -> laxer isolation (monotone-ish)."""
     hp = paper_workload("bert-infer", 0)
     be = paper_workload("whisper-train", 1)
-    trace = _trace("bert-infer", duration=20.0)
-    lo = run_policy("tally", hp, [be], trace, A100, duration=20.0,
+    trace = _trace("bert-infer", duration=12.0)
+    lo = run_policy("tally", hp, [be], trace, A100, duration=12.0,
                     threshold=0.0316e-3)
-    hi = run_policy("tally", hp, [be], trace, A100, duration=20.0,
+    hi = run_policy("tally", hp, [be], trace, A100, duration=12.0,
                     threshold=50e-3)
     assert lo.hp_latency.p99() <= hi.hp_latency.p99() * 1.05
 

@@ -26,6 +26,7 @@ def _ref_decode(model, params, prompt, n):
     return toks[len(prompt):]
 
 
+@pytest.mark.slow
 def test_continuous_batching_matches_sequential(setup):
     cfg, model, params = setup
     eng = ServingEngine(model, params, ServingConfig(capacity=3,

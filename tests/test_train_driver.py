@@ -1,10 +1,17 @@
-"""Training driver end-to-end: loss decreases, checkpoint/restart exact."""
+"""Training driver end-to-end: loss decreases, checkpoint/restart exact.
+
+The checkpoint/microbatching/adafactor end-to-end runs compile large
+reduced models and dominate suite wall time; they carry the ``slow``
+marker (run with ``pytest -m slow``).
+"""
 import jax
 import numpy as np
+import pytest
 
 from repro.launch.train import train
 
 
+@pytest.mark.slow
 def test_training_reduces_loss():
     out = train("mamba2-130m", steps=12, batch=4, seq=32, reduced=True,
                 log_every=100)
@@ -12,6 +19,7 @@ def test_training_reduces_loss():
     assert out["loss_drop"] > 0.1
 
 
+@pytest.mark.slow
 def test_checkpoint_restart_is_exact(tmp_path):
     """Run 8 steps straight vs 4 + restart + 4: identical final params."""
     kw = dict(steps=8, batch=2, seq=32, reduced=True, log_every=100,
@@ -30,6 +38,7 @@ def test_checkpoint_restart_is_exact(tmp_path):
         straight["params"], resumed["params"])
 
 
+@pytest.mark.slow
 def test_microbatched_grad_accumulation_matches():
     """num_microbatches=2 must equal one big batch (same data, fp32)."""
     a = train("qwen2.5-14b", steps=3, batch=4, seq=32, reduced=True,
@@ -40,6 +49,7 @@ def test_microbatched_grad_accumulation_matches():
     np.testing.assert_allclose(a["losses"], b["losses"], rtol=5e-3)
 
 
+@pytest.mark.slow
 def test_adafactor_arch_trains():
     out = train("arctic-480b", steps=6, batch=2, seq=32, reduced=True,
                 log_every=100)
