@@ -28,7 +28,7 @@ def main(argv=None) -> int:
     from benchmarks import (fig5_end_to_end, fig6_load_sensitivity,
                             fig7a_scalability, fig7b_decomposition,
                             fig7c_threshold, fig8_fleet, overheads,
-                            roofline, table1_turnaround)
+                            roofline, table1_turnaround, trace_bench)
 
     plan = [
         (fig5_end_to_end.main, ["--quick"] if quick else []),
@@ -39,6 +39,7 @@ def main(argv=None) -> int:
         (fig7c_threshold.main, ["--quick"] if quick else []),
         (fig8_fleet.main, [] if quick else ["--full"]),
         (overheads.main, []),
+        (trace_bench.main, ["--quick"] if quick else []),
     ]
 
     if args.dry_run:

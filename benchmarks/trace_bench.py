@@ -1,0 +1,148 @@
+"""Trace-subsystem round-trip benchmark: record -> export -> ingest ->
+replay, with schema equality asserted at every hop.
+
+Measures (1) recording overhead on the fast engine (recorded vs bare
+run of the same co-location), (2) the cost of each pipeline stage
+(finish / Chrome export / re-ingest / replay), and (3) the bundled
+sample-trace ingest path. The replayed trace must be bit-identical to
+the original — this benchmark doubles as the round-trip contract check
+at benchmark scale (CI runs the ``--quick`` tier and uploads the
+exported Chrome trace as a build artifact).
+
+    PYTHONPATH=src python -m benchmarks.trace_bench            # full
+    PYTHONPATH=src python -m benchmarks.trace_bench --quick    # CI smoke
+    PYTHONPATH=src python -m benchmarks.trace_bench --quick \\
+        --export-path /tmp/tally_trace.json      # keep the Chrome trace
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import tempfile
+import time
+from pathlib import Path
+from typing import Dict
+
+import numpy as np
+
+from repro.core.device_model import A100
+from repro.core.simulator import simulate
+from repro.core.traffic import maf2_like_trace, scale_to_load
+from repro.core.workloads import isolated_time, paper_workload
+from repro.trace import (TraceRecorder, diff_traces, load_chrome, replay,
+                         trace_workload, write_chrome)
+from benchmarks.common import RESULTS, fmt_table
+
+SAMPLE_CSV = Path(__file__).parent.parent / "tests" / "data" \
+    / "sample_nsys.csv"
+
+
+def round_trip(duration: float, export_path: Path) -> Dict[str, float]:
+    hp = paper_workload("resnet50-infer", 0)
+    bes = [paper_workload("gpt2-train", 1)]
+    iso = isolated_time(hp, A100)
+    base = maf2_like_trace(duration=duration, mean_rate=0.5 / iso, seed=7)
+    traffic = scale_to_load(base, iso, 0.5)
+
+    t0 = time.perf_counter()
+    bare = simulate("tally", hp, bes, traffic, A100, duration=duration)
+    wall_bare = time.perf_counter() - t0
+
+    rec = TraceRecorder()
+    t0 = time.perf_counter()
+    book = simulate("tally", hp, bes, traffic, A100, duration=duration,
+                    recorder=rec)
+    wall_rec = time.perf_counter() - t0
+    np.testing.assert_array_equal(np.asarray(bare.latency.latencies),
+                                  np.asarray(book.latency.latencies))
+
+    t0 = time.perf_counter()
+    trace = rec.finish()
+    wall_finish = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    write_chrome(trace, export_path)
+    wall_export = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    back = load_chrome(export_path)
+    wall_ingest = time.perf_counter() - t0
+    back.assert_equal(trace, meta=True)       # export->ingest is lossless
+
+    t0 = time.perf_counter()
+    book2, trace2 = replay(back)
+    wall_replay = time.perf_counter() - t0
+    trace2.assert_equal(trace)                # replay is bit-exact
+    np.testing.assert_array_equal(np.asarray(book.latency.latencies),
+                                  np.asarray(book2.latency.latencies))
+    assert diff_traces(trace, trace2).identical
+
+    return {
+        "duration_s": duration,
+        "events": float(len(trace)),
+        "wall_s_bare": wall_bare,
+        "wall_s_recorded": wall_rec,
+        "recording_overhead_pct": 100.0 * (wall_rec / wall_bare - 1.0)
+        if wall_bare else 0.0,
+        "wall_s_finish": wall_finish,
+        "wall_s_export": wall_export,
+        "wall_s_ingest": wall_ingest,
+        "wall_s_replay": wall_replay,
+        "export_bytes": float(export_path.stat().st_size),
+    }
+
+
+def sample_ingest() -> Dict[str, float]:
+    t0 = time.perf_counter()
+    w = trace_workload(SAMPLE_CSV, priority=1)
+    wall = time.perf_counter() - t0
+    return {"kernels": float(w.n_kernels),
+            "isolated_time_s": isolated_time(w, A100),
+            "wall_s": wall}
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="short co-location window (CI smoke)")
+    ap.add_argument("--output", default=str(RESULTS / "BENCH_trace.json"))
+    ap.add_argument("--export-path", default=None,
+                    help="keep the exported Chrome trace at this path "
+                         "(default: a temp file, deleted)")
+    args = ap.parse_args(argv)
+
+    t0 = time.time()
+    duration = 4.0 if args.quick else 20.0
+    if args.export_path:
+        export_path = Path(args.export_path)
+        export_path.parent.mkdir(parents=True, exist_ok=True)
+        rt = round_trip(duration, export_path)
+    else:
+        with tempfile.TemporaryDirectory() as td:
+            rt = round_trip(duration, Path(td) / "tally_trace.json")
+
+    result = {
+        "schema": 1,
+        "tier": "quick" if args.quick else "full",
+        "round_trip": rt,
+        "sample_ingest": sample_ingest(),
+        "bench_wall_s": time.time() - t0,
+    }
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    with open(args.output, "w") as f:
+        json.dump(result, f, indent=1)
+
+    print("== trace_bench: record -> export -> ingest -> replay ==")
+    rows = [{"stage": s, "wall_s": rt[f"wall_s_{s}"]}
+            for s in ("bare", "recorded", "finish", "export", "ingest",
+                      "replay")]
+    print(fmt_table(rows, ("stage", "wall_s"), floatfmt="{:,.3f}"))
+    print(f"\n{rt['events']:,.0f} events; recording overhead "
+          f"{rt['recording_overhead_pct']:.1f}% over the bare fast run; "
+          f"round trip bit-exact")
+    print(f"wrote {args.output}  ({result['bench_wall_s']:.0f}s)")
+    return result
+
+
+if __name__ == "__main__":
+    main()

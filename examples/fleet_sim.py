@@ -7,7 +7,9 @@ SLO-driven BE migration — each GPU runs the full single-GPU Tally stack
 (priority scheduler + transparent profiler) underneath.
 
     PYTHONPATH=src python examples/fleet_sim.py
+    PYTHONPATH=src python examples/fleet_sim.py --no-fast   # reference engine
 """
+import argparse
 import sys
 from pathlib import Path
 
@@ -17,7 +19,14 @@ from repro.core.fleet import FleetSimulator, be_job, hp_service
 from repro.core.workloads import paper_workload
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--no-fast", action="store_true",
+                    help="drive every device with the reference per-kernel "
+                         "event loop (bit-identical results, ~10x slower) — "
+                         "the one-flag replay when a trace diff flags a "
+                         "divergence")
+    args = ap.parse_args(argv)
     horizon = 20.0
     jobs = [
         # two production inference services with a tight p99 SLO
@@ -36,9 +45,11 @@ def main() -> None:
     ]
 
     print(f"fleet: 4x A100, horizon {horizon:.0f}s, "
-          f"policy interference_aware\n")
+          f"policy interference_aware"
+          f"{' (reference engine)' if args.no_fast else ''}\n")
     fleet = FleetSimulator(4, "interference_aware", horizon=horizon,
-                           check_interval=2.0, min_window=15)
+                           check_interval=2.0, min_window=15,
+                           fast=not args.no_fast)
     result = fleet.run(jobs)
 
     print("== placements ==")

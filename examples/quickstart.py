@@ -6,7 +6,9 @@ made preemptible) and scheduled opportunistically; the HP kernel runs
 immediately. Results are bit-compatible with direct execution.
 
     PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py --no-fast  # reference engine
 """
+import argparse
 import sys
 from pathlib import Path
 
@@ -20,7 +22,13 @@ from repro.kernels import ref
 from repro.kernels.matmul import matmul_desc
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--no-fast", action="store_true",
+                    help="run the closing simulation-substrate cross-check "
+                         "on the reference per-kernel event loop instead of "
+                         "the fast path (real-mode execution is unaffected)")
+    args = ap.parse_args(argv)
     server = TallyServer()
     hp = server.register("inference", priority=0)
     be = server.register("training", priority=1)
@@ -53,6 +61,30 @@ def main() -> None:
     print(f"BE kernel was transparently transformed: config = {cfg}")
     print(f"(profiled {server.profiler.profiled_kernels} unique kernels; "
           "HP kernels are never transformed)")
+
+    # -- simulation-substrate cross-check ---------------------------------
+    # the same co-location shape on the discrete-event substrate; --no-fast
+    # swaps in the reference engine (results are contractually identical)
+    from repro.core.device_model import A100
+    from repro.core.simulator import simulate
+    from repro.core.traffic import TrafficTrace
+    from repro.core.workloads import SimKernel, Workload
+
+    def sim_wl(name, m, k, n, priority, kind):
+        kern = SimKernel(f"{name}/matmul", 2.0 * m * k * n,
+                         4.0 * (m * k + k * n + m * n),
+                         max(1, (m // 32) * (n // 32)))
+        return Workload(name=name, kind=kind, priority=priority,
+                        iteration=lambda i: [kern])
+
+    engine = "reference" if args.no_fast else "fast"
+    book = simulate("tally", sim_wl("inference", 64, 128, 96, 0, "infer"),
+                    [sim_wl("training", 256, 128, 96, 1, "train")],
+                    TrafficTrace(np.asarray([0.0]), 1e-3), A100,
+                    duration=1e-3, fast=not args.no_fast)
+    print(f"sim substrate ({engine} engine): HP turnaround "
+          f"{book.latency.latencies[0] * 1e6:.2f} us with "
+          f"{book.be_tput['training'].samples:.0f} BE kernels co-running")
 
 
 if __name__ == "__main__":

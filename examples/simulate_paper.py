@@ -3,7 +3,9 @@ BERT inference (high-priority, MAF2 traffic at 50% load) co-located with
 Whisper training (best-effort), across all five GPU-sharing policies.
 
     PYTHONPATH=src python examples/simulate_paper.py
+    PYTHONPATH=src python examples/simulate_paper.py --no-fast  # ref engine
 """
+import argparse
 import sys
 from pathlib import Path
 
@@ -18,7 +20,12 @@ PAPER_AVG = {"time_slicing": 252.3, "mps": 345.0, "mps_priority": 195.5,
              "tgs": 188.9, "tally": 7.2}
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--no-fast", action="store_true",
+                    help="use the reference per-kernel event loop for the "
+                         "priority engines (bit-identical, ~10x slower)")
+    args = ap.parse_args(argv)
     hp = paper_workload("bert-infer", 0)
     be = paper_workload("whisper-train", 1)
     iso = isolated_time(hp, A100)
@@ -31,7 +38,8 @@ def main() -> None:
     print(f"{'policy':14s} {'p99':>10s} {'overhead':>9s} "
           f"{'sys tput':>8s}   paper avg ovh")
     for pol in ("time_slicing", "mps", "mps_priority", "tgs", "tally"):
-        r = run_policy(pol, hp, [be], trace, A100, duration=40.0)
+        r = run_policy(pol, hp, [be], trace, A100, duration=40.0,
+                       fast=not args.no_fast)
         s = r.summary()
         print(f"{pol:14s} {s['p99_ms']:8.2f}ms {s['p99_overhead_pct']:8.1f}% "
               f"{s['system_throughput']:8.2f}   {PAPER_AVG[pol]:6.1f}%")

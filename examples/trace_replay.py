@@ -1,0 +1,96 @@
+"""Trace walkthrough: record -> export -> ingest -> replay -> diff ->
+calibrate, in 60 seconds.
+
+Records a Tally co-location at kernel granularity, exports it as a
+Chrome trace (open it at https://ui.perfetto.dev), re-ingests it
+losslessly, replays it bit-for-bit through both engines, diffs the
+schedule against a different policy, builds a workload from a bundled
+real-style nsys kernel CSV, and fits DeviceModel roofline parameters
+back out of the recording.
+
+    PYTHONPATH=src python examples/trace_replay.py
+    PYTHONPATH=src python examples/trace_replay.py --no-fast   # reference engine
+"""
+import argparse
+import sys
+import tempfile
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
+
+import numpy as np
+
+from repro.core.device_model import A100
+from repro.core.simulator import simulate
+from repro.core.traffic import maf2_like_trace, scale_to_load
+from repro.core.workloads import isolated_time, paper_workload
+from repro.trace import (TraceRecorder, diff_traces, fit_device_model,
+                         load_chrome, replay, trace_workload, write_chrome)
+
+SAMPLE = Path(__file__).parent.parent / "tests" / "data" / "sample_nsys.csv"
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--no-fast", action="store_true",
+                    help="record with the reference per-kernel event loop "
+                         "instead of the fast path (identical trace)")
+    args = ap.parse_args(argv)
+    fast = not args.no_fast
+
+    hp = paper_workload("bert-infer", 0)
+    be = paper_workload("gpt2-train", 1)
+    iso = isolated_time(hp, A100)
+    traffic = scale_to_load(
+        maf2_like_trace(duration=4.0, mean_rate=20.0, burstiness=1.4,
+                        level_period=1.0, seed=1), iso, 0.5)
+
+    print(f"== 1. record (engine: {'fast' if fast else 'reference'}) ==")
+    rec = TraceRecorder()
+    simulate("tally", hp, [be], traffic, A100, duration=4.0, fast=fast,
+             recorder=rec)
+    trace = rec.finish()
+    s = trace.summary()
+    print(f"  {s['events']:,} events: {s['hp_launch']:,} HP kernels, "
+          f"{s['be_launch']:,} BE launches, {s['gate_close']} HP busy "
+          f"periods, {s['preempt']} preemptions")
+
+    out = Path(tempfile.mkdtemp()) / "tally_trace.json"
+    print(f"\n== 2. export -> {out} ==")
+    write_chrome(trace, out)
+    print(f"  {out.stat().st_size / 1e6:.1f} MB Chrome trace "
+          "(drop onto https://ui.perfetto.dev)")
+
+    print("\n== 3. ingest + bit-exact replay ==")
+    back = load_chrome(out)
+    back.assert_equal(trace, meta=True)
+    print("  re-ingested trace is bit-identical to the recording")
+    _, replayed = replay(back)
+    d = diff_traces(trace, replayed)
+    print(f"  replay through the recorded engine: {d.format()}")
+    _, replayed_ref = replay(back, fast=False)
+    d = diff_traces(trace, replayed_ref)
+    print(f"  replay through the reference engine: {d.format()}")
+
+    print("\n== 4. diff against a different policy ==")
+    _, ablated = replay(back, policy="tally_kernel")   # transforms off
+    d = diff_traces(trace, ablated)
+    print("  " + d.format().replace("\n", "\n  "))
+
+    print("\n== 5. trace-driven workload from a real-style nsys CSV ==")
+    w = trace_workload(SAMPLE, priority=1)
+    print(f"  {w.name}: {w.n_kernels} kernels, isolated iteration "
+          f"{isolated_time(w, A100) * 1e3:.2f} ms, host gap "
+          f"{w.host_gap * 1e6:.0f} us/kernel")
+    book = simulate("tally", hp, [w], traffic, A100, duration=4.0, fast=fast)
+    print(f"  co-located with bert-infer under tally: BE retired "
+          f"{book.be_tput[w.name].samples:.1f} iterations, HP p99 "
+          f"{np.percentile(book.latency.latencies, 99) * 1e3:.2f} ms")
+
+    print("\n== 6. calibrate DeviceModel roofline from the recording ==")
+    fit = fit_device_model(trace, name="A100-refit")
+    print("  " + fit.report(truth=A100).replace("\n", "\n  "))
+
+
+if __name__ == "__main__":
+    main()

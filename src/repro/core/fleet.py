@@ -283,7 +283,7 @@ class FleetSimulator:
                  device_models: Optional[List[DeviceModel]] = None,
                  horizon: float = 60.0, check_interval: float = 5.0,
                  threshold: float = 0.0316e-3, max_be_per_device: int = 4,
-                 min_window: int = 20, fast: bool = True):
+                 min_window: int = 20, fast: bool = True, recorder=None):
         if device_models is not None and len(device_models) != n_devices:
             raise ValueError("device_models length must equal n_devices")
         models = device_models or [dev] * n_devices
@@ -301,8 +301,14 @@ class FleetSimulator:
         self.max_be = max_be_per_device
         self.min_window = min_window
         self.fast = fast
+        # optional repro.trace.TraceRecorder: every device engine records
+        # into it under its fleet index; migrations tag the moved job
+        self.recorder = recorder
         self.devices = [
-            ManagedDevice(i, DeviceEngine(m, horizon, threshold, fast=fast))
+            ManagedDevice(i, DeviceEngine(
+                m, horizon, threshold, fast=fast,
+                recorder=recorder.for_device(i) if recorder is not None
+                else None))
             for i, m in enumerate(models)
         ]
         # victim selection shares the interference-aware policy's memoized
@@ -325,6 +331,7 @@ class FleetSimulator:
                 n_be=len(d.be_jobs), max_be=self.max_be,
                 hp_occupancy=d.occupancy(now, self.check_interval),
                 be_workloads=tuple(j.workload for j in d.be_jobs.values()),
+                be_job_ids=tuple(d.be_jobs.keys()),
             ))
         return views
 
@@ -348,7 +355,8 @@ class FleetSimulator:
         d = self.devices[idx]
         if job.kind == "hp_service":
             trace = self._service_trace(job, d, now)
-            d.engine.attach_hp(job.workload, trace, offset=now)
+            d.engine.attach_hp(job.workload, trace, offset=now,
+                               job_id=job.name)
             d.hp_job, d.hp_placed_at = job, now
             d.lat_seen = 0
             d.window.reset()
@@ -364,7 +372,7 @@ class FleetSimulator:
             wl = job.workload
             if wl.name != job.name:
                 wl = dataclasses.replace(wl, name=job.name)
-            d.engine.attach_be(wl)
+            d.engine.attach_be(wl, job_id=job.name)
             d.be_jobs[job.name] = job
             d.be_placed_at[job.name] = now
             if job.duration is not None:    # departure becomes a decision
@@ -408,6 +416,8 @@ class FleetSimulator:
             dst.be_jobs[victim] = job
             dst.be_placed_at[victim] = placed_at
             self.migrations.append(Migration(now, victim, d.index, idx))
+            if self.recorder is not None:
+                self.recorder.migrate(now, victim, d.index, idx)
 
     def _depart_finished(self, now: float) -> None:
         for d in self.devices:
@@ -430,6 +440,27 @@ class FleetSimulator:
         names = [j.name for j in jobs]
         if len(set(names)) != len(names):
             raise ValueError("job names must be unique")
+        if self.recorder is not None:
+            # register the full job set up front (submission order, so a
+            # replayed fleet rebuilds an identical jobs table) and stamp
+            # the fleet configuration a replay needs
+            self.recorder.meta.setdefault("fleet", {
+                "n_devices": len(self.devices), "policy": self.policy.name,
+                "horizon": self.horizon,
+                "check_interval": self.check_interval,
+                "threshold": self.threshold, "max_be_per_device": self.max_be,
+                "min_window": self.min_window, "fast": self.fast,
+                "devices": [dataclasses.asdict(d.dev) for d in self.devices],
+            })
+            for job in jobs:
+                self.recorder.register_job(
+                    job.name, job.workload, role=job.kind,
+                    arrival=job.arrival, load=job.load, seed=job.seed,
+                    slo_factor=job.slo_factor, duration=job.duration,
+                    trace_arrivals=(job.trace.arrivals.tolist()
+                                    if job.trace is not None else None),
+                    trace_duration=(job.trace.duration
+                                    if job.trace is not None else 0.0))
         self.migrations: List[Migration] = []
         self._placements: List[Tuple[float, str, int]] = []
         self._departed: Dict[str, int] = {}

@@ -44,6 +44,8 @@ class DeviceView:
     max_be: int
     hp_occupancy: float          # measured/declared HP busy fraction [0, 1]
     be_workloads: Tuple[Workload, ...] = ()
+    be_job_ids: Tuple[str, ...] = ()   # stable job identities (survive BE
+    #                                    migration; align with trace events)
 
     def feasible_for(self, kind: str) -> bool:
         if kind == "hp_service":

@@ -58,9 +58,13 @@ class BEProgress:
 class Client:
     """Per-workload launch queue + execution state at the server."""
 
-    def __init__(self, workload: Workload):
+    def __init__(self, workload: Workload, job_id: Optional[str] = None):
         self.workload = workload
         self.name = workload.name
+        # stable fleet-wide identity: follows the client across BE
+        # migrations (trace events keep one job_id per job, whichever
+        # device they were recorded on)
+        self.job_id = job_id if job_id is not None else workload.name
         self.priority = workload.priority
         self.queue: Deque[PendingKernel] = deque()
         self.kernel_running = False

@@ -198,6 +198,8 @@ class SimExecutor:
         self.book = book
         self.hp_client = hp_client
         self.samples_per_request = samples_per_request
+        self.rec = None          # optional trace DeviceRecorder (read-only
+        #                          hooks; None keeps every path branch-free)
         self.events: List[Tuple[float, int, int, Any]] = []
         self._arr_heap: List[float] = []     # mirror of queued ARRIVAL times
         self._seq = itertools.count()
@@ -263,6 +265,9 @@ class SimExecutor:
         else:
             rounds = 0
         done = min(inf.prog.remaining, rounds * inf.tasks_per_round)
+        if self.rec is not None:
+            self.rec.cancel(self.clock, client, inf.prog.pending.kernel,
+                            inf.prog.watermark + done)
         self.scheduler.on_be_complete(client, inf.prog,
                                       inf.prog.watermark + done)
         if client.current is None:               # kernel happened to finish
@@ -281,6 +286,9 @@ class SimExecutor:
                         end=self.clock + dur)
         self.inflight = inf
         self.hp_busy_time += dur
+        if self.rec is not None:
+            self.rec.hp_launch(self.clock, client, pk.kernel, inf.end,
+                               pk.request_id)
         self._push(inf.end, COMPLETE, lid)
 
     def launch_be(self, client: Client, prog: BEProgress,
@@ -309,6 +317,8 @@ class SimExecutor:
                             start=self.clock, end=self.clock + t,
                             tasks_per_round=prog.remaining, round_t=t)
         self.inflight = inf
+        if self.rec is not None:
+            self.rec.be_launch(self.clock, client, k, inf.end, cfg)
         self._push(inf.end, COMPLETE, lid)
 
     def preempt_best_effort(self) -> None:
@@ -325,6 +335,9 @@ class SimExecutor:
             if drain_end < inf.end:
                 inf.end = drain_end
                 inf.preempted = True
+                if self.rec is not None:
+                    self.rec.preempt(self.clock, inf.client,
+                                     inf.prog.pending.kernel, drain_end)
                 lid = next(self._launch_ids)    # supersede completion event
                 inf.launch_id = lid
                 self._push(inf.end, COMPLETE, lid)
@@ -345,6 +358,8 @@ class SimExecutor:
                 self.book.arrival(rid, t)
                 hp = self.hp_client
                 assert hp is not None
+                if self.rec is not None:
+                    self.rec.arrival(t, rid, hp)
                 for i, k in enumerate(kernels):
                     hp.queue.append(PendingKernel(
                         k, request_id=rid,
@@ -358,6 +373,11 @@ class SimExecutor:
                 if inf.kind == "hp":
                     assert inf.pk is not None
                     self.scheduler.on_hp_complete(inf.client)
+                    if self.rec is not None:
+                        self.rec.hp_complete(self.clock, inf.client,
+                                             inf.pk.kernel,
+                                             inf.pk.request_id,
+                                             not inf.client.queue)
                     if inf.pk.last_of_request:
                         self.book.request_done(inf.pk.request_id, self.clock,
                                                self.samples_per_request)
@@ -375,6 +395,9 @@ class SimExecutor:
                                    if inf.cfg and inf.cfg.mode == "slice"
                                    else inf.prog.remaining)
                     wm = inf.prog.watermark + done
+                    if self.rec is not None:
+                        self.rec.be_complete(self.clock, inf.client,
+                                             inf.prog.pending.kernel, wm)
                     self.scheduler.on_be_complete(inf.client, inf.prog, wm)
                     if inf.client.current is None:       # kernel finished
                         wl = inf.client.workload
@@ -624,13 +647,31 @@ class _FastForward:
             self._backlog.popleft()        # empty request: arrival was the
             return True                    # only observable effect
         durs = self._request_durs(kernels)
-        end = float(_fold(ex.clock, durs)[-1])
+        folds = _fold(ex.clock, durs)
+        end = float(folds[-1])
         if end >= until:
             return False
         self._backlog.popleft()
         events = ex.events
-        while events and events[0][0] <= end:
-            self._absorb_in_flight()
+        rec = ex.rec
+        if rec is None:
+            while events and events[0][0] <= end:
+                self._absorb_in_flight()
+        else:
+            # replay the reference engine's record order: per-kernel
+            # launch, then any event firing during its flight (arrivals
+            # record at their own timestamps), then its completion — the
+            # absorbed set and all state transitions are identical to the
+            # bulk loop above, only the interleaving is made explicit
+            hp = ex.hp_client
+            n = len(kernels)
+            for i, k in enumerate(kernels):
+                ke = float(folds[i + 1])
+                rec.hp_launch(float(folds[i]), hp, k, ke, rid)
+                while events and events[0][0] <= ke:
+                    self._absorb_in_flight()
+                rec.hp_complete(ke, hp, k, rid,
+                                i == n - 1 and not self._backlog)
         if self._tmin <= end:
             self._drop_timers(end)
         ex.hp_busy_time = float(_fold(ex.hp_busy_time, durs)[-1])
@@ -643,10 +684,12 @@ class _FastForward:
         heap, no scheduler pass). False when the next launch would cross
         ``until`` — the reference loop owns horizon/strict semantics."""
         ex = self.ex
-        q = ex.hp_client.queue
+        hp = ex.hp_client
+        q = hp.queue
         events = ex.events
         book = ex.book
         spr = ex.samples_per_request
+        rec = ex.rec
         clock = ex.clock
         busy = ex.hp_busy_time
         while q:
@@ -668,10 +711,28 @@ class _FastForward:
                     if (tail.last_of_request
                             and tail.request_id == pk.request_id
                             and tail.kernel is kernels[-1]):
-                        end = float(_fold(clock, durs)[-1])
+                        folds = _fold(clock, durs)
+                        end = float(folds[-1])
                         if end < until:
-                            while events and events[0][0] <= end:
-                                self._absorb_in_flight()
+                            if rec is None:
+                                while events and events[0][0] <= end:
+                                    self._absorb_in_flight()
+                            else:
+                                # reference record order (see
+                                # ``_hp_backlog_step``); absorbed arrivals
+                                # land in the backlog, so ``q`` stays at
+                                # its pre-batch length throughout
+                                rid = tail.request_id
+                                for i in range(n):
+                                    ke = float(folds[i + 1])
+                                    rec.hp_launch(float(folds[i]), hp,
+                                                  kernels[i], ke, rid)
+                                    while events and events[0][0] <= ke:
+                                        self._absorb_in_flight()
+                                    rec.hp_complete(
+                                        ke, hp, kernels[i], rid,
+                                        i == n - 1 and len(q) == n
+                                        and not self._backlog)
                             if self._tmin <= end:
                                 self._drop_timers(end)
                             for _ in range(n):
@@ -686,6 +747,8 @@ class _FastForward:
                 ex.clock = clock
                 ex.hp_busy_time = busy
                 return False
+            if rec is not None:
+                rec.hp_launch(clock, hp, pk.kernel, end, pk.request_id)
             while events and events[0][0] <= end:
                 self._absorb_in_flight()
             if self._tmin <= end:
@@ -693,6 +756,9 @@ class _FastForward:
             q.popleft()
             clock = end
             busy = busy + dur
+            if rec is not None:
+                rec.hp_complete(end, hp, pk.kernel, pk.request_id,
+                                not q and not self._backlog)
             if pk.last_of_request:
                 book.request_done(pk.request_id, clock, spr)
         ex.clock = clock
@@ -771,12 +837,27 @@ class _FastForward:
                             self._absorb_in_flight()
                         if self._tmin <= end:
                             self._drop_timers(end)
+                        rec = ex.rec
+                        if rec is not None:
+                            # every batched slice is a full launch/complete
+                            # pair in the reference schedule; the batch
+                            # bound sits strictly before the next arrival,
+                            # so no recordable event interleaves
+                            w0 = prog.watermark
+                            for i in range(j):
+                                rec.be_launch(float(folds[i]), c, k,
+                                              float(folds[i + 1]), cfg)
+                                rec.be_complete(float(folds[i + 1]), c, k,
+                                                w0 + (i + 1) * chunk)
                         ex.clock = end
                         diffs = np.diff(folds[:j + 1])
                         ex.be_busy_time = float(
                             _fold(ex.be_busy_time, diffs)[-1])
                         prog.watermark += j * chunk
                         return _FF_DID
+            rec = ex.rec
+            if rec is not None:
+                rec.be_launch(now, c, k, end, cfg)
             events = ex.events
             while events and events[0][0] <= end:
                 self._absorb_in_flight()   # arrivals -> backlog; timers,
@@ -788,19 +869,21 @@ class _FastForward:
             # inline ``on_be_complete`` + ``Bookkeeper.iteration_done``
             wm = prog.watermark + done
             prog.watermark = wm
+            if rec is not None:
+                rec.be_complete(end, c, k, wm)
             if prog.pending.kernel.blocks - wm <= 0:
                 c.current = None
                 if prog.pending.last_of_iteration:
                     c.iterations_done += 1
                 wl = c.workload
-                rec = self._tput.get(id(c))
-                if rec is None:
+                acc = self._tput.get(id(c))
+                if acc is None:
                     tput = ex.book.be_tput.setdefault(
                         c.name, ThroughputStats(span=ex.book.duration))
-                    rec = (tput, wl.samples_per_kernel)
-                    self._tput[id(c)] = rec
+                    acc = (tput, wl.samples_per_kernel)
+                    self._tput[id(c)] = acc
                     self._pins[id(c)] = c
-                tput, spk = rec
+                tput, spk = acc
                 tput.samples += spk
                 if wl.host_gap > 0:
                     wake = end + wl.host_gap
@@ -823,6 +906,8 @@ class _FastForward:
             if t > ex.duration:
                 return
             ex.book.arrival(payload[0], t)
+            if ex.rec is not None:
+                ex.rec.arrival(t, payload[0], ex.hp_client)
             self._backlog.append(payload)
 
     def _absorb_next(self, until: float, strict: bool) -> bool:
@@ -845,6 +930,8 @@ class _FastForward:
                         continue           # silent skip, no clock motion
                     ex.clock = max(ex.clock, t)
                     ex.book.arrival(payload[0], t)
+                    if ex.rec is not None:
+                        ex.rec.arrival(t, payload[0], ex.hp_client)
                     self._backlog.append(payload)
                     return True
                 ex.clock = max(ex.clock, t)
@@ -884,12 +971,20 @@ class DeviceEngine:
 
     def __init__(self, dev: DeviceModel = A100, duration: float = 60.0,
                  threshold: float = 0.0316e-3, *,
-                 transforms_enabled: bool = True, fast: bool = True):
+                 transforms_enabled: bool = True, fast: bool = True,
+                 recorder=None):
         self.dev = dev
         self.duration = duration
         self.book = Bookkeeper(duration)
         self.ex = SimExecutor(dev, None, [], self.book, duration,
                               samples_per_request=1.0)
+        # recorder: a trace ``TraceRecorder`` (recorded as device 0) or a
+        # ``DeviceRecorder`` view handed out by the fleet; duck-typed so
+        # the core never imports the trace package
+        if recorder is not None and hasattr(recorder, "for_device"):
+            recorder = recorder.for_device(0)
+        self.rec = recorder
+        self.ex.rec = recorder
         self.profiler = TransparentProfiler(make_measure(dev), dev.sm_count,
                                             turnaround_bound=threshold,
                                             deterministic=True)
@@ -904,14 +999,19 @@ class DeviceEngine:
     # -- client attachment ----------------------------------------------------
 
     def attach_hp(self, workload: Workload, trace: Optional[TrafficTrace],
-                  offset: float = 0.0) -> Client:
+                  offset: float = 0.0,
+                  job_id: Optional[str] = None) -> Client:
         """Attach the device's (single) high-priority service; its request
-        arrivals are trace times shifted by ``offset`` (admission time)."""
+        arrivals are trace times shifted by ``offset`` (admission time).
+        ``job_id`` gives the client a stable fleet-wide identity in traces
+        (defaults to the workload name)."""
         if self.hp_client is not None:
             raise ValueError(f"device already hosts HP service "
                              f"{self.hp_client.name!r}")
-        client = Client(workload)
+        client = Client(workload, job_id=job_id)
         self.hp_client = client
+        if self.rec is not None:
+            self.rec.rec.register_job(client.job_id, workload)
         self.ex.set_hp_client(client, workload.samples_per_iteration)
         if trace is not None:
             for rid, t in enumerate(trace.arrivals):
@@ -923,12 +1023,16 @@ class DeviceEngine:
         return client
 
     def attach_be(self, workload: Optional[Workload] = None,
-                  client: Optional[Client] = None) -> Client:
+                  client: Optional[Client] = None,
+                  job_id: Optional[str] = None) -> Client:
         """Attach a best-effort client — fresh from a workload, or an
-        existing ``Client`` carrying its watermarked progress (migration)."""
+        existing ``Client`` carrying its watermarked progress *and* its
+        stable ``job_id`` (migration keeps one trace identity)."""
         if client is None:
             assert workload is not None
-            client = Client(workload)
+            client = Client(workload, job_id=job_id)
+        if self.rec is not None:
+            self.rec.rec.register_job(client.job_id, client.workload)
         self.be_clients.append(client)
         self.sched.add_client(client)
         if client.not_ready_until > self.ex.now():    # mid host-side gap:
@@ -1005,9 +1109,15 @@ class DeviceEngine:
 def _run_priority(policy: str, hp: Optional[Workload], bes: List[Workload],
                   trace: Optional[TrafficTrace], dev: DeviceModel,
                   duration: float, threshold: float,
-                  fast: bool = True) -> Bookkeeper:
+                  fast: bool = True, recorder=None) -> Bookkeeper:
+    if recorder is not None and hasattr(recorder, "meta"):
+        import dataclasses as _dc
+        recorder.meta.setdefault("run", {
+            "policy": policy, "duration": duration, "threshold": threshold,
+            "fast": fast, "device": _dc.asdict(dev)})
     eng = DeviceEngine(dev, duration, threshold,
-                       transforms_enabled=(policy == "tally"), fast=fast)
+                       transforms_enabled=(policy == "tally"), fast=fast,
+                       recorder=recorder)
     if hp is not None:
         eng.attach_hp(hp, trace)
     for w in bes:
@@ -1335,14 +1445,19 @@ def _run_timeslice(hp: Optional[Workload], bes: List[Workload],
 
 def simulate(policy: str, hp: Optional[Workload], bes: List[Workload],
              trace: Optional[TrafficTrace], dev: DeviceModel = A100,
-             duration: float = 60.0,
-             threshold: float = 0.0316e-3, fast: bool = True) -> Bookkeeper:
+             duration: float = 60.0, threshold: float = 0.0316e-3,
+             fast: bool = True, recorder=None) -> Bookkeeper:
     """``fast=False`` forces the reference per-kernel event loop for the
     priority engines (equivalence tests, perf baselines); the fluid/TGS/
-    time-slicing engines have a single implementation either way."""
+    time-slicing engines have a single implementation either way.
+    ``recorder`` (a ``repro.trace.TraceRecorder``) captures the schedule
+    at kernel granularity — priority engines only."""
     if policy in ("tally", "tally_kernel"):
         return _run_priority(policy, hp, bes, trace, dev, duration,
-                             threshold, fast=fast)
+                             threshold, fast=fast, recorder=recorder)
+    if recorder is not None:
+        raise ValueError(f"trace recording is only supported for the "
+                         f"priority engines, not {policy!r}")
     if policy in ("no_sched", "mps", "mps_priority"):
         return _run_concurrent(policy, hp, bes, trace, dev, duration)
     if policy == "tgs":
@@ -1355,10 +1470,11 @@ def simulate(policy: str, hp: Optional[Workload], bes: List[Workload],
 def run_policy(policy: str, hp: Workload, bes: List[Workload],
                trace: TrafficTrace, dev: DeviceModel = A100,
                duration: float = 60.0, threshold: float = 0.0316e-3,
-               fast: bool = True) -> RunResult:
-    """Co-execution run + isolated references -> RunResult."""
+               fast: bool = True, recorder=None) -> RunResult:
+    """Co-execution run + isolated references -> RunResult. ``recorder``
+    captures the co-execution run only (not the isolated baselines)."""
     book = simulate(policy, hp, bes, trace, dev, duration, threshold,
-                    fast=fast)
+                    fast=fast, recorder=recorder)
     iso = simulate("tally", hp, [], trace, dev, duration, threshold,
                    fast=fast)
     be_iso = {w.name: w.samples_per_iteration /

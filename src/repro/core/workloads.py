@@ -201,6 +201,21 @@ def isolated_time(w: Workload, dev: DeviceModel) -> float:
 
 
 # ---------------------------------------------------------------------------
+# Trace-driven workloads (real kernel timelines instead of synthesis)
+# ---------------------------------------------------------------------------
+
+
+def trace_workload(source, **kwargs) -> Workload:
+    """Workload whose kernel stream replays a real trace — an ingested
+    nsys-style CSV/JSON, a Chrome trace, or a recorded ``repro.trace``
+    ``Trace`` — instead of the calibrated synthesis above. Thin forwarder
+    to ``repro.trace.ingest.trace_workload`` (imported lazily: the trace
+    package layers on top of this module)."""
+    from repro.trace.ingest import trace_workload as _trace_workload
+    return _trace_workload(source, **kwargs)
+
+
+# ---------------------------------------------------------------------------
 # Kernel traces for the assigned architectures (analytic, from ModelConfig)
 # ---------------------------------------------------------------------------
 

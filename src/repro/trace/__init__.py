@@ -1,0 +1,37 @@
+"""Trace subsystem: record, ingest, replay, and calibrate kernel traces.
+
+Turns simulator runs into inspectable kernel-granularity timelines and
+turns real traces (nsys kernel exports, Chrome traces) into replayable
+workloads — the grounding loop trace-driven systems work is built on
+(Jeon et al., arXiv:1901.05758; Elvinger et al., arXiv:2501.16909).
+
+    schema     columnar trace-event model, JSON/NPZ round-trip
+    recorder   opt-in hooks on DeviceEngine / scheduler / FleetSimulator
+               (zero-cost when off, bit-exact with the fast path)
+    ingest     nsys-style CSV/JSON + Chrome-trace importers ->
+               ``trace_workload``
+    replay     deterministic re-simulation of a recorded trace through any
+               policy engine + kernel-by-kernel schedule diff
+    export     Perfetto/Chrome-trace export (lossless for our own traces)
+    calibrate  least-squares DeviceModel roofline fit from a trace
+"""
+from repro.trace.calibrate import CalibrationResult, fit_device_model
+from repro.trace.export import to_chrome, write_chrome
+from repro.trace.ingest import (KernelRecord, load_chrome, read_kernel_csv,
+                                read_kernel_json, trace_workload)
+from repro.trace.recorder import TraceRecorder
+from repro.trace.replay import (TraceDiff, arrival_trace, diff_traces,
+                                replay, replay_fleet)
+from repro.trace.schema import (EVENT_KINDS, JobDef, KernelDef, Trace,
+                                decode_config, encode_config)
+
+__all__ = [
+    "CalibrationResult", "fit_device_model",
+    "to_chrome", "write_chrome",
+    "KernelRecord", "load_chrome", "read_kernel_csv", "read_kernel_json",
+    "trace_workload",
+    "TraceRecorder",
+    "TraceDiff", "arrival_trace", "diff_traces", "replay", "replay_fleet",
+    "EVENT_KINDS", "JobDef", "KernelDef", "Trace",
+    "decode_config", "encode_config",
+]

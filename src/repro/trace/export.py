@@ -1,0 +1,122 @@
+"""Chrome-trace / Perfetto export for recorded traces.
+
+Produces the standard Trace Event Format (``chrome://tracing``,
+https://ui.perfetto.dev): one process per device, one thread per job,
+``"X"`` complete events per kernel launch/retire pair, instant events for
+gate changes / preemptions / cancellations / migrations / arrivals.
+
+The export is **lossless for our own traces**: every event carries its
+exact float64 second clocks in ``args`` (the µs ``ts``/``dur`` fields are
+views for the UI) and ``otherData.tally_schema`` embeds the full columnar
+schema, so ``ingest.load_chrome`` round-trips to a bit-identical
+``Trace``. Foreign tools read it as a plain Chrome trace.
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Dict, List, Tuple
+
+from repro.trace.schema import (ARRIVAL, BE_COMPLETE, BE_LAUNCH, CANCEL,
+                                EVENT_KINDS, GATE_CLOSE, GATE_OPEN,
+                                HP_COMPLETE, HP_LAUNCH, MIGRATE, PREEMPT,
+                                Trace, decode_config)
+
+_US = 1e6      # seconds -> Chrome trace microseconds
+
+
+def to_chrome(trace: Trace, *, embed_schema: bool = True) -> Dict[str, Any]:
+    """Trace Event Format dict (see module docstring)."""
+    events: List[Dict[str, Any]] = []
+    tids: Dict[Tuple[int, int], int] = {}     # (device, job) -> tid
+
+    def tid(dev: int, job: int) -> int:
+        key = (dev, job)
+        t = tids.get(key)
+        if t is None:
+            t = tids[key] = len(tids) + 1
+            jid = trace.jobs[job].job_id if 0 <= job < len(trace.jobs) \
+                else f"job{job}"
+            events.append({"ph": "M", "name": "thread_name", "pid": dev,
+                           "tid": t, "args": {"name": jid}})
+        return t
+
+    devices = sorted({int(d) for d in trace.device} | {0})
+    for d in devices:
+        events.append({"ph": "M", "name": "process_name", "pid": d,
+                       "args": {"name": f"gpu{d}"}})
+
+    # one in-flight launch per device at a time: pair launches with the
+    # next complete/cancel on the same device
+    pending: Dict[int, Dict[str, Any]] = {}
+    order = trace.time_sorted() if len(trace) else trace
+    for i in range(len(order)):
+        kind = int(order.kind[i])
+        t = float(order.ts[i])
+        dev = int(order.device[i])
+        job = int(order.job[i])
+        kidx = int(order.kernel[i])
+        val = float(order.value[i])
+        aux = int(order.aux[i])
+        if kind in (HP_LAUNCH, BE_LAUNCH):
+            k = trace.kernels[kidx]
+            args: Dict[str, Any] = {"t0_s": t, "end_planned_s": val,
+                                    "flops": k.flops, "bytes": k.bytes,
+                                    "blocks": k.blocks}
+            if kind == HP_LAUNCH:
+                args["request"] = aux
+            else:
+                mode, param = decode_config(aux)
+                args["config"] = mode if mode == "default" \
+                    else f"{mode}:{param}"
+            pending[dev] = {"ph": "X", "name": k.name, "cat": (
+                "hp" if kind == HP_LAUNCH else "be"), "pid": dev,
+                "tid": tid(dev, job), "ts": t * _US, "args": args}
+        elif kind in (HP_COMPLETE, BE_COMPLETE, CANCEL):
+            ev = pending.pop(dev, None)
+            if ev is not None:
+                ev["dur"] = max(t - ev["args"]["t0_s"], 0.0) * _US
+                ev["args"]["dur_s"] = t - ev["args"]["t0_s"]
+                if kind == BE_COMPLETE:
+                    ev["args"]["watermark"] = int(val)
+                if kind == CANCEL:
+                    ev["args"]["cancelled"] = True
+                events.append(ev)
+            if kind == CANCEL:
+                events.append(_instant("cancel", t, dev, tid(dev, job),
+                                       {"t0_s": t, "watermark": int(val)}))
+        else:
+            name = EVENT_KINDS[kind]
+            args = {"t0_s": t}
+            if kind == MIGRATE:
+                args["dst"] = int(val)
+            elif kind == PREEMPT:
+                args["drain_end_s"] = val
+            elif kind == ARRIVAL:
+                args["request"] = aux
+            scope = {GATE_CLOSE: "p", GATE_OPEN: "p",
+                     MIGRATE: "g"}.get(kind, "t")
+            events.append(_instant(name, t, dev, tid(dev, job), args,
+                                   scope))
+    for dev, ev in sorted(pending.items()):    # still in flight at horizon
+        ev["dur"] = max(ev["args"]["end_planned_s"]
+                        - ev["args"]["t0_s"], 0.0) * _US
+        ev["args"]["unfinished"] = True
+        events.append(ev)
+
+    other: Dict[str, Any] = {"tool": "repro.trace",
+                             "summary": trace.summary()}
+    if embed_schema:
+        other["tally_schema"] = trace.to_json_dict()
+    return {"traceEvents": events, "displayTimeUnit": "ms",
+            "otherData": other}
+
+
+def _instant(name: str, t: float, pid: int, tid: int,
+             args: Dict[str, Any], scope: str = "t") -> Dict[str, Any]:
+    return {"ph": "i", "name": name, "pid": pid, "tid": tid,
+            "ts": t * _US, "s": scope, "args": args}
+
+
+def write_chrome(trace: Trace, path, *, embed_schema: bool = True) -> None:
+    with open(path, "w") as f:
+        json.dump(to_chrome(trace, embed_schema=embed_schema), f)

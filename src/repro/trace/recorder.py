@@ -1,0 +1,185 @@
+"""Opt-in trace recording for the simulation engines and the fleet.
+
+A ``TraceRecorder`` owns shared append-only event columns plus the kernel
+and job interning tables; ``for_device(i)`` hands out a ``DeviceRecorder``
+view that tags every event with that device index (one per
+``DeviceEngine``; a single-GPU run records as device 0). Recording is
+opt-in — engines carry ``rec = None`` and guard every hook with one branch
+— and must never perturb the simulation: hooks only *read* clocks the
+engines already computed. The fast path records from the same closed-form
+folds ``_FastForward`` retires requests with, so a fast run's trace is
+bit-identical to the reference engine's (events, clocks, and append
+order; guarded by ``tests/test_fast_path.py``).
+
+Gate events are derived here, not in the engines: the recorder tracks
+the HP busy period per device and emits ``gate_close`` at the first HP
+launch of a period and ``gate_open`` at the HP completion that drains
+the queue — both engines drive the same state machine with the same
+clocks, so the derived events agree bit for bit too.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+from repro.trace.schema import (ARRIVAL, BE_COMPLETE, BE_LAUNCH, CANCEL,
+                                GATE_CLOSE, GATE_OPEN, HP_COMPLETE,
+                                HP_LAUNCH, MIGRATE, PREEMPT, JobDef,
+                                KernelDef, Trace, encode_config)
+
+
+class TraceRecorder:
+    """Shared event columns + interning tables for one recorded run."""
+
+    def __init__(self) -> None:
+        self._ts: List[float] = []
+        self._kind: List[int] = []
+        self._device: List[int] = []
+        self._job: List[int] = []
+        self._kernel: List[int] = []
+        self._value: List[float] = []
+        self._aux: List[int] = []
+        self._kernels: List[KernelDef] = []
+        self._kkey: Dict[tuple, int] = {}      # value key -> kernel idx
+        self._kid: Dict[int, int] = {}         # id(kernel obj) -> kernel idx
+        self._kpins: List[Any] = []            # keep interned object ids live
+        self._jobs: List[JobDef] = []
+        self._jidx: Dict[str, int] = {}        # job_id -> job idx
+        self.meta: Dict[str, Any] = {}
+
+    # -- interning -------------------------------------------------------------
+
+    def _intern_kernel(self, k) -> int:
+        idx = self._kid.get(id(k))
+        if idx is None:
+            key = (k.name, k.flops, k.bytes, k.blocks,
+                   getattr(k, "sliceable", True))
+            idx = self._kkey.get(key)
+            if idx is None:
+                idx = len(self._kernels)
+                self._kernels.append(KernelDef(*key))
+                self._kkey[key] = idx
+            self._kid[id(k)] = idx
+            self._kpins.append(k)
+        return idx
+
+    def register_job(self, job_id: str, workload, *, role: Optional[str]
+                     = None, arrival: float = 0.0, load: float = 0.5,
+                     seed: int = 0, slo_factor: float = 2.0,
+                     duration: Optional[float] = None,
+                     trace_arrivals: Optional[List[float]] = None,
+                     trace_duration: float = 0.0) -> int:
+        """Add a job to the table (idempotent per ``job_id`` — the fleet
+        registers with full spec detail before the engine's attach-time
+        registration runs)."""
+        idx = self._jidx.get(job_id)
+        if idx is not None:
+            return idx
+        iteration = [self._intern_kernel(k) for k in workload.iteration(0)]
+        idx = len(self._jobs)
+        self._jobs.append(JobDef(
+            job_id=job_id, workload=workload.name, kind=workload.kind,
+            priority=workload.priority,
+            samples_per_iteration=workload.samples_per_iteration,
+            n_kernels=workload.n_kernels, host_gap=workload.host_gap,
+            iteration_time=workload.iteration_time, iteration=iteration,
+            role=role, arrival=arrival, load=load, seed=seed,
+            slo_factor=slo_factor, duration=duration,
+            trace_arrivals=trace_arrivals, trace_duration=trace_duration))
+        self._jidx[job_id] = idx
+        return idx
+
+    # -- event append ----------------------------------------------------------
+
+    def _append(self, t: float, kind: int, device: int, job: int,
+                kernel: int, value: float, aux: int) -> None:
+        self._ts.append(t)
+        self._kind.append(kind)
+        self._device.append(device)
+        self._job.append(job)
+        self._kernel.append(kernel)
+        self._value.append(value)
+        self._aux.append(aux)
+
+    def for_device(self, index: int) -> "DeviceRecorder":
+        return DeviceRecorder(self, index)
+
+    def migrate(self, t: float, job_id: str, src: int, dst: int) -> None:
+        self._append(t, MIGRATE, src, self._jidx[job_id], -1, float(dst), 0)
+
+    # -- materialization -------------------------------------------------------
+
+    def finish(self) -> Trace:
+        """Build the immutable columnar ``Trace`` (recorder stays usable —
+        a later ``finish`` sees any further events)."""
+        return Trace.from_columns(
+            {"ts": self._ts, "kind": self._kind, "device": self._device,
+             "job": self._job, "kernel": self._kernel, "value": self._value,
+             "aux": self._aux},
+            list(self._kernels), list(self._jobs), dict(self.meta))
+
+
+class DeviceRecorder:
+    """Per-device event hooks appending into the shared recorder.
+
+    The engines call these at the exact simulator clocks the reference
+    event loop observes; the per-device gate state machine lives here so
+    gate events never depend on engine internals."""
+
+    __slots__ = ("rec", "device", "_gate_closed")
+
+    def __init__(self, rec: TraceRecorder, device: int):
+        self.rec = rec
+        self.device = device
+        self._gate_closed = False
+
+    def _job(self, client) -> int:
+        return self.rec._jidx[client.job_id]
+
+    # -- HP lifecycle ----------------------------------------------------------
+
+    def arrival(self, t: float, rid: int, client) -> None:
+        self.rec._append(t, ARRIVAL, self.device, self._job(client), -1,
+                         0.0, rid)
+
+    def hp_launch(self, t: float, client, kernel, end: float,
+                  rid: int) -> None:
+        rec = self.rec
+        j = self._job(client)
+        if not self._gate_closed:
+            rec._append(t, GATE_CLOSE, self.device, j, -1, 0.0, 0)
+            self._gate_closed = True
+        rec._append(t, HP_LAUNCH, self.device, j, rec._intern_kernel(kernel),
+                    end, rid)
+
+    def hp_complete(self, t: float, client, kernel, rid: int,
+                    queue_empty: bool) -> None:
+        rec = self.rec
+        j = self._job(client)
+        rec._append(t, HP_COMPLETE, self.device, j,
+                    rec._intern_kernel(kernel), 0.0, rid)
+        if queue_empty:
+            rec._append(t, GATE_OPEN, self.device, j, -1, 0.0, 0)
+            self._gate_closed = False
+
+    # -- BE lifecycle ----------------------------------------------------------
+
+    def be_launch(self, t: float, client, kernel, end: float, cfg) -> None:
+        rec = self.rec
+        rec._append(t, BE_LAUNCH, self.device, self._job(client),
+                    rec._intern_kernel(kernel), end,
+                    encode_config(cfg.mode, cfg.param))
+
+    def be_complete(self, t: float, client, kernel, watermark: int) -> None:
+        rec = self.rec
+        rec._append(t, BE_COMPLETE, self.device, self._job(client),
+                    rec._intern_kernel(kernel), float(watermark), 0)
+
+    def preempt(self, t: float, client, kernel, drain_end: float) -> None:
+        rec = self.rec
+        rec._append(t, PREEMPT, self.device, self._job(client),
+                    rec._intern_kernel(kernel), drain_end, 0)
+
+    def cancel(self, t: float, client, kernel, watermark: int) -> None:
+        rec = self.rec
+        rec._append(t, CANCEL, self.device, self._job(client),
+                    rec._intern_kernel(kernel), float(watermark), 0)

@@ -1,0 +1,250 @@
+"""Deterministic replay of recorded traces + kernel-by-kernel diffing.
+
+A recorded ``Trace`` is a self-contained reproduction artifact: the jobs
+table carries enough workload structure to rebuild bit-exact ``Workload``
+objects, ``arrival`` events carry the exact HP traffic, and ``meta``
+carries the engine configuration. ``replay`` re-runs a single-device
+trace through any policy engine (default: the recorded one) and returns
+the new books plus a fresh recording; replaying with the recorded policy
+reproduces the original schedule bit for bit. ``replay_fleet`` does the
+same for a recorded ``FleetSimulator`` run (placement, SLO checks, and
+migrations re-derive identically from the replayed job set).
+
+``diff_traces`` is the debugging companion: it aligns two recordings
+kernel-by-kernel per (device, job) stream and reports the first point
+where the schedules diverge — structurally (different kernel/kind order)
+or in time (same order, shifted clocks).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.device_model import DeviceModel
+from repro.core.traffic import TrafficTrace
+from repro.trace.ingest import _workload_from_jobdef
+from repro.trace.recorder import TraceRecorder
+from repro.trace.schema import (ARRIVAL, BE_COMPLETE, BE_LAUNCH,
+                                HP_COMPLETE, HP_LAUNCH, EVENT_KINDS, Trace)
+
+
+def arrival_trace(trace: Trace, job_id: Optional[str] = None
+                  ) -> Optional[TrafficTrace]:
+    """HP request arrivals recorded in ``trace`` as a ``TrafficTrace``
+    (exact float64 times; ``None`` when the trace has no arrivals)."""
+    sub = trace.filter(kinds=[ARRIVAL], job_id=job_id)
+    if not len(sub):
+        return None
+    duration = float(trace.meta.get("run", {}).get(
+        "duration", trace.meta.get("fleet", {}).get("horizon", 0.0)))
+    arr = np.sort(sub.ts)
+    if duration <= 0.0:
+        duration = float(arr[-1]) if len(arr) else 0.0
+    return TrafficTrace(arr, duration)
+
+
+def replay(trace: Trace, *, policy: Optional[str] = None,
+           fast: Optional[bool] = None,
+           record: bool = True) -> Tuple[Any, Optional[Trace]]:
+    """Re-simulate a recorded single-device run.
+
+    Returns ``(book, new_trace)`` — ``new_trace`` is ``None`` when
+    ``record=False``. With the recorded policy/engine settings the replay
+    is bit-exact; pass ``policy=`` / ``fast=`` to re-run the same inputs
+    through a different engine (then diff the two traces)."""
+    from repro.core.simulator import simulate
+
+    meta = trace.meta.get("run")
+    if meta is None:
+        raise ValueError("trace has no 'run' metadata — was it recorded "
+                         "by simulate()? (fleet traces: replay_fleet)")
+    dev = DeviceModel(**meta["device"])
+    hp = None
+    bes = []
+    for job in trace.jobs:
+        wl = _workload_from_jobdef(trace, job)
+        if job.priority == 0:
+            hp = wl
+        else:
+            bes.append(wl)
+    traffic = arrival_trace(trace) if hp is not None else None
+    rec = TraceRecorder() if record else None
+    book = simulate(policy or meta["policy"], hp, bes, traffic, dev,
+                    duration=meta["duration"], threshold=meta["threshold"],
+                    fast=meta["fast"] if fast is None else fast,
+                    recorder=rec)
+    return book, (rec.finish() if rec is not None else None)
+
+
+def replay_fleet(trace: Trace, *, fast: Optional[bool] = None,
+                 record: bool = True) -> Tuple[Any, Optional[Trace]]:
+    """Re-run a recorded ``FleetSimulator`` run from its trace alone.
+
+    Jobs, device models, placement policy, and controller settings are
+    reconstructed from the trace; with the recorded engine settings the
+    replayed fleet reproduces placements, migrations, and every kernel
+    event bit for bit."""
+    from repro.core.fleet import FleetSimulator, JobSpec
+
+    meta = trace.meta.get("fleet")
+    if meta is None:
+        raise ValueError("trace has no 'fleet' metadata — was it recorded "
+                         "by FleetSimulator? (single runs: replay)")
+    jobs = []
+    for j in trace.jobs:
+        if j.role is None:
+            continue
+        explicit = (TrafficTrace(np.asarray(j.trace_arrivals, np.float64),
+                                 j.trace_duration)
+                    if j.trace_arrivals is not None else None)
+        jobs.append(JobSpec(
+            name=j.job_id, kind=j.role,
+            workload=_workload_from_jobdef(trace, j), arrival=j.arrival,
+            load=j.load, seed=j.seed, slo_factor=j.slo_factor,
+            trace=explicit, duration=j.duration))
+    rec = TraceRecorder() if record else None
+    fleet = FleetSimulator(
+        meta["n_devices"], meta["policy"],
+        device_models=[DeviceModel(**d) for d in meta["devices"]],
+        horizon=meta["horizon"], check_interval=meta["check_interval"],
+        threshold=meta["threshold"],
+        max_be_per_device=meta["max_be_per_device"],
+        min_window=meta["min_window"],
+        fast=meta["fast"] if fast is None else fast, recorder=rec)
+    result = fleet.run(jobs)
+    return result, (rec.finish() if rec is not None else None)
+
+
+# ---------------------------------------------------------------------------
+# Schedule diff
+# ---------------------------------------------------------------------------
+
+_SCHED_KINDS = (HP_LAUNCH, HP_COMPLETE, BE_LAUNCH, BE_COMPLETE)
+
+
+@dataclass
+class StreamDiff:
+    """Alignment of one (device, job) kernel stream across two traces."""
+
+    device: int
+    job_id: str
+    matched: int                        # aligned prefix length
+    len_a: int
+    len_b: int
+    first_divergence: Optional[Dict[str, Any]] = None
+    max_clock_skew: float = 0.0         # |ts_a - ts_b| over aligned prefix
+
+    @property
+    def identical(self) -> bool:
+        return (self.first_divergence is None
+                and self.len_a == self.len_b
+                and self.max_clock_skew == 0.0)
+
+
+@dataclass
+class TraceDiff:
+    """Kernel-by-kernel schedule comparison of two recorded runs."""
+
+    streams: List[StreamDiff] = field(default_factory=list)
+    only_a: List[Tuple[int, str]] = field(default_factory=list)
+    only_b: List[Tuple[int, str]] = field(default_factory=list)
+
+    @property
+    def identical(self) -> bool:
+        return (not self.only_a and not self.only_b
+                and all(s.identical for s in self.streams))
+
+    @property
+    def first_divergence(self) -> Optional[Dict[str, Any]]:
+        cands = [s.first_divergence for s in self.streams
+                 if s.first_divergence is not None]
+        return min(cands, key=lambda d: d["ts"]) if cands else None
+
+    def format(self) -> str:
+        if self.identical:
+            n = sum(s.matched for s in self.streams)
+            return f"schedules identical ({n} kernel events aligned)"
+        lines = ["schedules DIVERGE:"]
+        for dev, job in self.only_a:
+            lines.append(f"  stream (gpu{dev}, {job}) only in trace A")
+        for dev, job in self.only_b:
+            lines.append(f"  stream (gpu{dev}, {job}) only in trace B")
+        for s in self.streams:
+            if s.identical:
+                continue
+            lines.append(f"  (gpu{s.device}, {s.job_id}): "
+                         f"{s.matched}/{s.len_a} vs {s.len_b} events "
+                         f"aligned, max clock skew {s.max_clock_skew:.3e}s")
+            d = s.first_divergence
+            if d is not None:
+                lines.append(f"    first divergence at event {d['index']} "
+                             f"(t={d['ts']:.6f}s): {d['reason']}")
+                lines.append(f"      A: {d['a']}")
+                lines.append(f"      B: {d['b']}")
+        return "\n".join(lines)
+
+
+def _streams(trace: Trace) -> Dict[Tuple[int, str], List[int]]:
+    out: Dict[Tuple[int, str], List[int]] = {}
+    for i in np.flatnonzero(np.isin(trace.kind, _SCHED_KINDS)):
+        key = (int(trace.device[i]), trace.jobs[int(trace.job[i])].job_id)
+        out.setdefault(key, []).append(int(i))
+    return out
+
+
+def _sig(trace: Trace, i: int) -> Tuple:
+    k = trace.kernels[int(trace.kernel[i])]
+    return (int(trace.kind[i]), k.name, k.blocks)
+
+
+def diff_traces(a: Trace, b: Trace, *, atol: float = 0.0) -> TraceDiff:
+    """Align two recordings kernel-by-kernel.
+
+    Streams are keyed by (device, job); within a stream events align
+    positionally and diverge either **structurally** (different kernel or
+    event kind at a position — the schedules took different branches) or
+    **in time** (same structure, clocks apart by more than ``atol``).
+    """
+    sa, sb = _streams(a), _streams(b)
+    diff = TraceDiff(only_a=sorted(set(sa) - set(sb)),
+                     only_b=sorted(set(sb) - set(sa)))
+    for key in sorted(set(sa) & set(sb)):
+        ia, ib = sa[key], sb[key]
+        sd = StreamDiff(device=key[0], job_id=key[1], matched=0,
+                        len_a=len(ia), len_b=len(ib))
+        for pos, (ea, eb) in enumerate(zip(ia, ib)):
+            ta, tb = float(a.ts[ea]), float(b.ts[eb])
+            if _sig(a, ea) != _sig(b, eb):
+                sd.first_divergence = {
+                    "index": pos, "ts": min(ta, tb),
+                    "reason": "structural (different kernel/event)",
+                    "a": a.event(ea), "b": b.event(eb)}
+                break
+            skew = abs(ta - tb)
+            if skew > sd.max_clock_skew:
+                sd.max_clock_skew = skew
+            if skew > atol and sd.first_divergence is None:
+                sd.first_divergence = {
+                    "index": pos, "ts": min(ta, tb),
+                    "reason": f"timing (clock skew {skew:.3e}s)",
+                    "a": a.event(ea), "b": b.event(eb)}
+                break
+            sd.matched = pos + 1
+        else:
+            if sd.len_a != sd.len_b and sd.first_divergence is None:
+                pos = min(sd.len_a, sd.len_b)
+                longer, idx = (a, ia) if sd.len_a > sd.len_b else (b, ib)
+                ev = longer.event(idx[pos])
+                sd.first_divergence = {
+                    "index": pos, "ts": ev["ts"],
+                    "reason": f"length ({sd.len_a} vs {sd.len_b} events)",
+                    "a": ev if sd.len_a > sd.len_b else None,
+                    "b": ev if sd.len_b > sd.len_a else None}
+        diff.streams.append(sd)
+    return diff
+
+
+def kind_name(kind: int) -> str:
+    return EVENT_KINDS[kind]

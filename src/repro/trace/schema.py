@@ -1,0 +1,259 @@
+"""Columnar trace-event model with stable JSON/NPZ round-trip.
+
+A ``Trace`` is seven parallel event columns plus two interning tables
+(kernels, jobs) and a free-form ``meta`` dict. Events cover the full
+co-execution lifecycle at kernel granularity:
+
+    arrival       HP request admitted            aux=request id
+    hp_launch     HP kernel dispatched           value=planned end, aux=rid
+    hp_complete   HP kernel retired              aux=rid
+    be_launch     BE launch dispatched           value=planned end,
+                                                 aux=encoded LaunchConfig
+    be_complete   BE launch retired              value=new block watermark
+    gate_close    scheduler gate shut (HP busy period begins at this launch)
+    gate_open     scheduler gate reopened (HP queue drained)
+    preempt       in-flight BE launch truncated  value=drain end
+    cancel        in-flight BE launch cancelled  value=credited watermark
+                  (migration detach)
+    migrate       BE job moved between devices   value=destination device
+
+Column order is append order, which the recorder keeps identical between
+the fast and reference engines (the bit-exactness contract extends to
+traces: same events, same clocks, same order). Timestamps are exact
+float64 simulator clocks — JSON serialization uses Python's repr-exact
+float encoding and NPZ stores the arrays verbatim, so
+``Trace.from_json_dict(t.to_json_dict())`` is bit-identical.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+SCHEMA_VERSION = 1
+
+(ARRIVAL, HP_LAUNCH, HP_COMPLETE, BE_LAUNCH, BE_COMPLETE,
+ GATE_CLOSE, GATE_OPEN, PREEMPT, CANCEL, MIGRATE) = range(10)
+
+EVENT_KINDS = ("arrival", "hp_launch", "hp_complete", "be_launch",
+               "be_complete", "gate_close", "gate_open", "preempt",
+               "cancel", "migrate")
+
+LAUNCH_KINDS = (HP_LAUNCH, BE_LAUNCH)
+COMPLETE_KINDS = (HP_COMPLETE, BE_COMPLETE)
+
+# LaunchConfig <-> int64 for the aux column of be_launch events
+_CONFIG_MODES = ("default", "slice", "preempt")
+
+
+def encode_config(mode: str, param: int) -> int:
+    return (_CONFIG_MODES.index(mode) << 32) | int(param)
+
+
+def decode_config(code: int) -> Tuple[str, int]:
+    return _CONFIG_MODES[int(code) >> 32], int(code) & 0xFFFFFFFF
+
+
+@dataclass(frozen=True)
+class KernelDef:
+    """One unique kernel work-shape (the trace's kernel table row)."""
+
+    name: str
+    flops: float
+    bytes: float
+    blocks: int
+    sliceable: bool = True
+
+
+@dataclass
+class JobDef:
+    """One client of a recorded run: identity + enough workload structure
+    to reconstruct a bit-exact replayable ``Workload`` (iterations in this
+    repo repeat one kernel list; ``iteration`` holds its kernel-table ids).
+    Fleet-level fields (``role`` onwards) parameterize ``replay_fleet``."""
+
+    job_id: str
+    workload: str                      # underlying workload name
+    kind: str                          # "train" | "infer"
+    priority: int
+    samples_per_iteration: float
+    n_kernels: int
+    host_gap: float
+    iteration_time: float
+    iteration: List[int] = field(default_factory=list)
+    role: Optional[str] = None         # "hp_service" | "be_train" | None
+    arrival: float = 0.0
+    load: float = 0.5
+    seed: int = 0
+    slo_factor: float = 2.0
+    duration: Optional[float] = None
+    trace_arrivals: Optional[List[float]] = None   # explicit HP traffic
+    trace_duration: float = 0.0
+
+
+_COLUMNS = ("ts", "kind", "device", "job", "kernel", "value", "aux")
+_DTYPES = {"ts": np.float64, "kind": np.int8, "device": np.int16,
+           "job": np.int32, "kernel": np.int32, "value": np.float64,
+           "aux": np.int64}
+
+
+@dataclass
+class Trace:
+    """Columnar event log + interning tables + run metadata."""
+
+    ts: np.ndarray
+    kind: np.ndarray
+    device: np.ndarray
+    job: np.ndarray
+    kernel: np.ndarray
+    value: np.ndarray
+    aux: np.ndarray
+    kernels: List[KernelDef] = field(default_factory=list)
+    jobs: List[JobDef] = field(default_factory=list)
+    meta: Dict[str, Any] = field(default_factory=dict)
+
+    # -- construction ---------------------------------------------------------
+
+    @classmethod
+    def from_columns(cls, cols: Dict[str, Sequence], kernels: List[KernelDef],
+                     jobs: List[JobDef], meta: Dict[str, Any]) -> "Trace":
+        arrays = {c: np.asarray(cols[c], dtype=_DTYPES[c]) for c in _COLUMNS}
+        return cls(kernels=kernels, jobs=jobs, meta=meta, **arrays)
+
+    def __len__(self) -> int:
+        return len(self.ts)
+
+    @property
+    def n_events(self) -> int:
+        return len(self.ts)
+
+    def job_index(self, job_id: str) -> int:
+        for i, j in enumerate(self.jobs):
+            if j.job_id == job_id:
+                return i
+        raise KeyError(f"unknown job {job_id!r}; "
+                       f"jobs: {[j.job_id for j in self.jobs]}")
+
+    def event(self, i: int) -> Dict[str, Any]:
+        """One event as a readable dict (debug/diff reporting)."""
+        k = int(self.kernel[i])
+        j = int(self.job[i])
+        return {
+            "ts": float(self.ts[i]),
+            "kind": EVENT_KINDS[int(self.kind[i])],
+            "device": int(self.device[i]),
+            "job": self.jobs[j].job_id if 0 <= j < len(self.jobs) else None,
+            "kernel": self.kernels[k].name if k >= 0 else None,
+            "value": float(self.value[i]),
+            "aux": int(self.aux[i]),
+        }
+
+    # -- views ----------------------------------------------------------------
+
+    def select(self, mask: np.ndarray) -> "Trace":
+        """Event subset sharing the interning tables (analysis view)."""
+        return Trace(ts=self.ts[mask], kind=self.kind[mask],
+                     device=self.device[mask], job=self.job[mask],
+                     kernel=self.kernel[mask], value=self.value[mask],
+                     aux=self.aux[mask], kernels=self.kernels,
+                     jobs=self.jobs, meta=self.meta)
+
+    def filter(self, kinds: Optional[Sequence[int]] = None,
+               device: Optional[int] = None,
+               job_id: Optional[str] = None) -> "Trace":
+        mask = np.ones(len(self.ts), dtype=bool)
+        if kinds is not None:
+            mask &= np.isin(self.kind, np.asarray(kinds, dtype=np.int8))
+        if device is not None:
+            mask &= self.device == device
+        if job_id is not None:
+            mask &= self.job == self.job_index(job_id)
+        return self.select(mask)
+
+    def time_sorted(self) -> "Trace":
+        """Events in global time order (stable: append order breaks ties).
+        Raw column order is per-device append order — a multi-device trace
+        interleaves whole advance segments, so sort before timeline use."""
+        return self.select(np.argsort(self.ts, kind="stable"))
+
+    def summary(self) -> Dict[str, int]:
+        out = {"events": int(len(self.ts)), "kernels": len(self.kernels),
+               "jobs": len(self.jobs),
+               "devices": int(self.device.max()) + 1 if len(self.ts) else 0}
+        counts = np.bincount(self.kind, minlength=len(EVENT_KINDS))
+        for name, n in zip(EVENT_KINDS, counts):
+            out[name] = int(n)
+        return out
+
+    # -- equality -------------------------------------------------------------
+
+    def equal(self, other: "Trace", *, meta: bool = False) -> bool:
+        try:
+            self.assert_equal(other, meta=meta)
+            return True
+        except AssertionError:
+            return False
+
+    def assert_equal(self, other: "Trace", *, meta: bool = False) -> None:
+        """Bit-exact equality of events and tables (optionally meta)."""
+        for c in _COLUMNS:
+            np.testing.assert_array_equal(
+                getattr(self, c), getattr(other, c),
+                err_msg=f"trace column {c!r} differs")
+        assert self.kernels == other.kernels, "kernel tables differ"
+        assert self.jobs == other.jobs, "job tables differ"
+        if meta:
+            assert self.meta == other.meta, "meta differs"
+
+    # -- JSON round-trip ------------------------------------------------------
+
+    def to_json_dict(self) -> Dict[str, Any]:
+        return {
+            "version": SCHEMA_VERSION,
+            "meta": self.meta,
+            "kernels": [asdict(k) for k in self.kernels],
+            "jobs": [asdict(j) for j in self.jobs],
+            "events": {c: getattr(self, c).tolist() for c in _COLUMNS},
+        }
+
+    @classmethod
+    def from_json_dict(cls, d: Dict[str, Any]) -> "Trace":
+        if d.get("version") != SCHEMA_VERSION:
+            raise ValueError(f"unsupported trace schema version "
+                             f"{d.get('version')!r}")
+        kernels = [KernelDef(**k) for k in d["kernels"]]
+        jobs = [JobDef(**j) for j in d["jobs"]]
+        return cls.from_columns(d["events"], kernels, jobs, d["meta"])
+
+    def save_json(self, path) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_json_dict(), f)
+
+    @classmethod
+    def load_json(cls, path) -> "Trace":
+        with open(path) as f:
+            return cls.from_json_dict(json.load(f))
+
+    # -- NPZ round-trip -------------------------------------------------------
+
+    def save_npz(self, path) -> None:
+        tables = json.dumps({"version": SCHEMA_VERSION, "meta": self.meta,
+                             "kernels": [asdict(k) for k in self.kernels],
+                             "jobs": [asdict(j) for j in self.jobs]})
+        np.savez_compressed(
+            path, tables=np.asarray(tables),
+            **{c: getattr(self, c) for c in _COLUMNS})
+
+    @classmethod
+    def load_npz(cls, path) -> "Trace":
+        with np.load(path, allow_pickle=False) as d:
+            tables = json.loads(str(d["tables"]))
+            if tables.get("version") != SCHEMA_VERSION:
+                raise ValueError(f"unsupported trace schema version "
+                                 f"{tables.get('version')!r}")
+            cols = {c: d[c] for c in _COLUMNS}
+        kernels = [KernelDef(**k) for k in tables["kernels"]]
+        jobs = [JobDef(**j) for j in tables["jobs"]]
+        return cls.from_columns(cols, kernels, jobs, tables["meta"])

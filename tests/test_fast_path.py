@@ -103,6 +103,49 @@ def test_fast_path_equivalence_be_only_and_hp_only():
 
 
 # ---------------------------------------------------------------------------
+# Recording contract (PR-3): the fast path must stay bit-exact with the
+# reference engine while trace recording is enabled — same events, same
+# clocks, same order — and recording must not perturb the schedule.
+# ---------------------------------------------------------------------------
+
+
+def test_fast_path_recording_equivalence():
+    from repro.trace import TraceRecorder
+    hp = paper_workload("resnet50-infer", 0)
+    bes = [paper_workload("gpt2-train", 1),
+           paper_workload("pegasus-train", 2)]
+    trace = _trace(hp, load=0.5)
+    rec_ref, rec_fast = TraceRecorder(), TraceRecorder()
+    ref = simulate("tally", hp, bes, trace, A100, duration=6.0,
+                   fast=False, recorder=rec_ref)
+    fast = simulate("tally", hp, bes, trace, A100, duration=6.0,
+                    fast=True, recorder=rec_fast)
+    _assert_books_equal(ref, fast)
+    t_ref, t_fast = rec_ref.finish(), rec_fast.finish()
+    assert len(t_ref) > 0
+    t_ref.assert_equal(t_fast)           # bit-identical events + clocks
+    # recording is observation-only: an unrecorded run books identically
+    bare = simulate("tally", hp, bes, trace, A100, duration=6.0, fast=True)
+    _assert_books_equal(bare, fast)
+
+
+def test_fast_path_recording_equivalence_long_kernels():
+    """Whisper's long kernels drive the preempt-mode launches (drain
+    truncation events) through the reference machinery on both engines."""
+    from repro.trace import TraceRecorder
+    hp = paper_workload("bert-infer", 0)
+    be = paper_workload("whisper-train", 1)
+    trace = _trace(hp, load=0.8, seed=9)
+    rec_ref, rec_fast = TraceRecorder(), TraceRecorder()
+    ref = simulate("tally", hp, [be], trace, A100, duration=6.0,
+                   fast=False, recorder=rec_ref)
+    fast = simulate("tally", hp, [be], trace, A100, duration=6.0,
+                    fast=True, recorder=rec_fast)
+    _assert_books_equal(ref, fast)
+    rec_ref.finish().assert_equal(rec_fast.finish())
+
+
+# ---------------------------------------------------------------------------
 # DeviceEngine: segmented strict advances + attach/detach (fleet shape)
 # ---------------------------------------------------------------------------
 
@@ -243,6 +286,52 @@ def test_window_quantile_degrades_to_p2():
         w.add(x)
     exact = np.percentile(data, 99.0)
     assert abs(w.value() - exact) <= 0.1 * exact
+
+
+def test_window_quantile_window_shorter_than_samples():
+    """Capacity smaller than the sample count: the ring stops absorbing
+    but count keeps the true total and value() hands off to P² (which saw
+    every sample) — no silent truncation to the first `capacity`."""
+    rng = np.random.default_rng(13)
+    data = rng.lognormal(0.0, 1.0, 50)
+    w = WindowQuantile(0.9, capacity=8)
+    for x in data:
+        w.add(x)
+    assert w.count == 50
+    exact = np.percentile(data, 90.0)
+    ring_only = np.percentile(data[:8], 90.0)
+    assert abs(w.value() - exact) <= abs(ring_only - exact) + 0.25 * exact
+    assert data.min() <= w.value() <= data.max()
+
+
+def test_window_quantile_reset_mid_stream():
+    """reset() must clear BOTH the ring and the P² state: post-reset
+    values are exact over only the new samples, even after an overflow."""
+    w = WindowQuantile(0.99, capacity=16)
+    for x in np.linspace(100.0, 200.0, 64):     # overflow into P² regime
+        w.add(x)
+    w.reset()
+    assert w.count == 0 and math.isnan(w.value())
+    fresh = [0.5, 0.1, 0.9, 0.3]
+    for x in fresh:
+        w.add(x)
+    assert w.count == 4
+    assert w.value() == pytest.approx(np.percentile(fresh, 99.0))
+
+
+@pytest.mark.parametrize("n", [1, 2, 3, 4])
+@pytest.mark.parametrize("q", [0.5, 0.9, 0.99])
+def test_p2_matches_np_percentile_under_five_samples(n, q):
+    """P² is defined to be exact (same linear interpolation) while five
+    or fewer observations have been seen — pin it against np.percentile
+    for every count below the marker threshold."""
+    rng = np.random.default_rng(100 * n)
+    data = rng.uniform(-5.0, 5.0, n)
+    est = P2Quantile(q)
+    for x in data:
+        est.add(x)
+    assert est.count == n
+    assert est.value() == pytest.approx(np.percentile(data, 100.0 * q))
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,390 @@
+"""Trace subsystem: schema round-trips, recording contracts, ingest,
+replay, diff, calibration, and fleet job identity across migration.
+
+The heart of this file is the ISSUE's round-trip acceptance criterion:
+record(simulate(w)) -> export -> ingest -> replay reproduces the
+original schedule bit-for-bit, on both engines, single-GPU and 4-GPU
+fleet (including a BE migration)."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.device_model import A100
+from repro.core.fleet import FleetSimulator, be_job, hp_service
+from repro.core.simulator import simulate
+from repro.core.traffic import TrafficTrace, maf2_like_trace, scale_to_load
+from repro.core.workloads import (SimKernel, Workload, isolated_time,
+                                  paper_workload)
+from repro.core.workloads import trace_workload as wl_trace_workload
+from repro.trace import (TraceRecorder, diff_traces, fit_device_model,
+                         load_chrome, read_kernel_csv, replay, replay_fleet,
+                         to_chrome, trace_workload, write_chrome)
+from repro.trace.schema import (ARRIVAL, BE_COMPLETE, BE_LAUNCH, GATE_CLOSE,
+                                GATE_OPEN, MIGRATE, Trace, decode_config,
+                                encode_config)
+
+from pathlib import Path
+
+SAMPLE_CSV = Path(__file__).parent / "data" / "sample_nsys.csv"
+
+
+def _traffic(hp, load=0.5, duration=4.0, seed=3):
+    base = maf2_like_trace(duration=duration, mean_rate=20.0,
+                           burstiness=1.3, level_period=1.0, seed=seed)
+    return scale_to_load(base, isolated_time(hp, A100), load)
+
+
+def _record(fast=True, duration=4.0, policy="tally"):
+    hp = paper_workload("resnet50-infer", 0)
+    bes = [paper_workload("gpt2-train", 1)]
+    traffic = _traffic(hp, duration=duration)
+    rec = TraceRecorder()
+    book = simulate(policy, hp, bes, traffic, A100, duration=duration,
+                    fast=fast, recorder=rec)
+    return book, rec.finish()
+
+
+# ---------------------------------------------------------------------------
+# Schema round-trips
+# ---------------------------------------------------------------------------
+
+
+def test_json_round_trip_exact():
+    _, trace = _record(duration=2.0)
+    blob = json.dumps(trace.to_json_dict())          # through real JSON text
+    back = Trace.from_json_dict(json.loads(blob))
+    back.assert_equal(trace, meta=True)
+
+
+def test_npz_round_trip_exact(tmp_path):
+    _, trace = _record(duration=2.0)
+    p = tmp_path / "t.npz"
+    trace.save_npz(p)
+    Trace.load_npz(p).assert_equal(trace, meta=True)
+
+
+def test_schema_version_guard(tmp_path):
+    _, trace = _record(duration=2.0)
+    d = trace.to_json_dict()
+    d["version"] = 999
+    with pytest.raises(ValueError):
+        Trace.from_json_dict(d)
+
+
+def test_config_encoding():
+    for mode, param in (("default", 0), ("slice", 64), ("preempt", 432)):
+        assert decode_config(encode_config(mode, param)) == (mode, param)
+
+
+def test_filter_and_sort():
+    _, trace = _record(duration=2.0)
+    arr = trace.filter(kinds=[ARRIVAL])
+    assert len(arr) == trace.summary()["arrival"]
+    hp_only = trace.filter(job_id="resnet50-infer")
+    assert len(hp_only) > 0
+    assert not set(np.unique(hp_only.kind)) & {BE_LAUNCH, BE_COMPLETE}
+    ts = trace.time_sorted().ts
+    assert np.all(np.diff(ts) >= 0)
+
+
+def test_gate_events_alternate():
+    """Gate closes exactly once per HP busy period and reopens after it;
+    projected on their own they must strictly alternate."""
+    _, trace = _record(duration=2.0)
+    gates = trace.filter(kinds=[GATE_CLOSE, GATE_OPEN])
+    kinds = gates.kind.tolist()
+    assert kinds[0] == GATE_CLOSE
+    for a, b in zip(kinds, kinds[1:]):
+        assert a != b
+    assert trace.summary()["gate_close"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# Round-trip acceptance: record -> export -> ingest -> replay, bit-for-bit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fast", [True, False])
+def test_single_gpu_round_trip_bit_exact(tmp_path, fast):
+    book, trace = _record(fast=fast)
+    p = tmp_path / "trace.chrome.json"
+    write_chrome(trace, p)
+    back = load_chrome(p)
+    back.assert_equal(trace, meta=True)              # lossless export
+    book2, trace2 = replay(back)
+    trace2.assert_equal(trace)                       # bit-exact schedule
+    np.testing.assert_array_equal(np.asarray(book.latency.latencies),
+                                  np.asarray(book2.latency.latencies))
+    assert diff_traces(trace, trace2).identical
+
+
+def test_replay_crosses_engines():
+    """A trace recorded fast replays bit-exactly on the reference engine
+    and vice versa (the recorded schedule is engine-independent)."""
+    _, t_fast = _record(fast=True)
+    _, back_ref = replay(t_fast, fast=False)
+    back_ref.assert_equal(t_fast)
+    _, t_ref = _record(fast=False)
+    t_ref.assert_equal(t_fast)
+
+
+def _fleet_jobs():
+    return [
+        hp_service("svc", paper_workload("bert-infer", 0), load=0.6,
+                   seed=2, slo_factor=1.02),
+        hp_service("svc2", paper_workload("resnet50-infer", 0),
+                   arrival=1.0, load=0.3, seed=4),
+        be_job("noisy", paper_workload("whisper-train", 1)),
+        be_job("bg", paper_workload("gpt2-train", 1), arrival=2.0),
+    ]
+
+
+def _fleet_record(fast=True):
+    rec = TraceRecorder()
+    # first_fit packs "noisy" next to "svc" -> SLO violation -> migration
+    fleet = FleetSimulator(4, "first_fit", horizon=6.0, check_interval=2.0,
+                           min_window=10, fast=fast, recorder=rec)
+    res = fleet.run(_fleet_jobs())
+    return fleet, res, rec.finish()
+
+
+@pytest.fixture(scope="module")
+def fleet_recording():
+    return _fleet_record(fast=True)
+
+
+def test_fleet_round_trip_bit_exact(tmp_path, fleet_recording):
+    _, res, trace = fleet_recording
+    assert len(res.migrations) >= 1                  # exercises MIGRATE
+    p = tmp_path / "fleet.chrome.json"
+    write_chrome(trace, p)
+    back = load_chrome(p)
+    back.assert_equal(trace, meta=True)
+    res2, trace2 = replay_fleet(back)
+    trace2.assert_equal(trace)
+    assert res2.cluster_goodput == res.cluster_goodput
+    assert len(res2.migrations) == len(res.migrations)
+
+
+def test_fleet_recording_engine_equivalence(fleet_recording):
+    _, res_fast, t_fast = fleet_recording
+    _, res_ref, t_ref = _fleet_record(fast=False)
+    t_ref.assert_equal(t_fast)
+    assert res_ref.cluster_goodput == res_fast.cluster_goodput
+
+
+def test_fleet_recording_does_not_perturb(fleet_recording):
+    fleet_rec, res_rec, _ = fleet_recording
+    fleet_bare = FleetSimulator(4, "first_fit", horizon=6.0,
+                                check_interval=2.0, min_window=10)
+    res_bare = fleet_bare.run(_fleet_jobs())
+    assert res_bare.cluster_goodput == res_rec.cluster_goodput
+    for a, b in zip(fleet_bare.devices, fleet_rec.devices):
+        np.testing.assert_array_equal(
+            np.asarray(a.engine.book.latency.latencies),
+            np.asarray(b.engine.book.latency.latencies))
+
+
+# ---------------------------------------------------------------------------
+# Job identity across migration (satellite regression)
+# ---------------------------------------------------------------------------
+
+
+def test_migrated_job_keeps_one_identity(fleet_recording):
+    """Events for a migrated BE job carry ONE job_id across devices, and
+    the migration itself is a tagged trace event."""
+    _, res, trace = fleet_recording
+    m = res.migrations[0]
+    moved = trace.filter(job_id=m.job)
+    devices = set(int(d) for d in moved.device)
+    assert {m.src, m.dst} <= devices                 # events on both sides
+    migs = trace.filter(kinds=[MIGRATE])
+    assert len(migs) == len(res.migrations)
+    assert trace.jobs[int(migs.job[0])].job_id == m.job
+    assert int(migs.value[0]) == m.dst and int(migs.device[0]) == m.src
+    # identity survives in the jobs table exactly once
+    assert sum(1 for j in trace.jobs if j.job_id == m.job) == 1
+
+
+def test_fleet_replay_with_explicit_traffic():
+    """An hp_service given an explicit TrafficTrace (not seed-generated)
+    must still replay bit-exactly — the arrivals ride in the jobs table."""
+    hp = paper_workload("resnet50-infer", 0)
+    traffic = _traffic(hp, duration=4.0)
+    rec = TraceRecorder()
+    fleet = FleetSimulator(1, "first_fit", horizon=4.0, check_interval=2.0,
+                           recorder=rec)
+    fleet.run([hp_service("svc", hp, trace=traffic, slo_factor=100.0),
+               be_job("bg", paper_workload("gpt2-train", 1))])
+    trace = rec.finish()
+    _, trace2 = replay_fleet(trace)
+    trace2.assert_equal(trace)
+
+
+def test_device_view_exposes_job_ids():
+    hp = paper_workload("bert-infer", 0)
+    be = paper_workload("whisper-train", 1)
+    fleet = FleetSimulator(2, "first_fit", horizon=4.0, check_interval=2.0)
+    fleet.run([hp_service("svc", hp, load=0.3, seed=1),
+               be_job("trainer", be)])
+    views = fleet._views(4.0)
+    by_idx = {v.index: v for v in views}
+    assert "trainer" in by_idx[0].be_job_ids
+    assert len(by_idx[0].be_job_ids) == len(by_idx[0].be_workloads)
+
+
+# ---------------------------------------------------------------------------
+# Ingest: bundled sample trace + foreign formats
+# ---------------------------------------------------------------------------
+
+
+def test_sample_trace_round_trips():
+    """Acceptance: trace_workload() round-trips the bundled sample trace —
+    per-kernel durations priced on the ingest device equal the recorded
+    durations, and the iteration span (incl. host gaps) is preserved."""
+    records = read_kernel_csv(SAMPLE_CSV)
+    w = trace_workload(SAMPLE_CSV, priority=1)
+    assert w.n_kernels == len(records)
+    for rec, k in zip(records, w.iteration(0)):
+        assert k.duration(A100) == pytest.approx(rec.duration, rel=1e-12)
+    span = (records[-1].start + records[-1].duration) - records[0].start
+    assert isolated_time(w, A100) == pytest.approx(span, rel=1e-9)
+
+
+def test_trace_workload_simulates():
+    """An ingested workload runs through the full Tally stack."""
+    hp = paper_workload("bert-infer", 0)
+    w = trace_workload(SAMPLE_CSV, priority=1)
+    book = simulate("tally", hp, [w], _traffic(hp, duration=2.0), A100,
+                    duration=2.0)
+    assert book.be_tput[w.name].samples > 0
+
+
+def test_trace_workload_from_recorded_trace():
+    _, trace = _record(duration=2.0)
+    w = trace_workload(trace, job_id="gpt2-train")
+    orig = paper_workload("gpt2-train", 1)
+    got, want = w.iteration(0), orig.iteration(0)
+    assert len(got) == len(want)
+    assert all(a == b for a, b in zip(got, want))    # SimKernel is frozen
+    with pytest.raises(ValueError):
+        trace_workload(trace)                        # ambiguous: 2 jobs
+
+
+def test_foreign_chrome_trace_ingest(tmp_path):
+    doc = {"traceEvents": [
+        {"ph": "X", "name": "matmul", "ts": 10.0, "dur": 500.0,
+         "args": {"blocks": 216}},
+        {"ph": "X", "name": "softmax", "ts": 520.0, "dur": 80.0},
+        {"ph": "M", "name": "process_name", "args": {"name": "gpu0"}},
+    ]}
+    p = tmp_path / "foreign.json"
+    p.write_text(json.dumps(doc))
+    w = trace_workload(p, priority=1)
+    ks = w.iteration(0)
+    assert [k.name.split("/")[-1] for k in ks] == ["matmul", "softmax"]
+    assert ks[0].duration(A100) == pytest.approx(500e-6, rel=1e-9)
+
+
+def test_workloads_module_forwarder():
+    w = wl_trace_workload(SAMPLE_CSV, priority=1)
+    assert w.n_kernels == 32
+
+
+def test_recorder_rejects_non_priority_engines():
+    hp = paper_workload("resnet50-infer", 0)
+    with pytest.raises(ValueError):
+        simulate("mps", hp, [], _traffic(hp), A100, duration=2.0,
+                 recorder=TraceRecorder())
+
+
+# ---------------------------------------------------------------------------
+# Diff engine
+# ---------------------------------------------------------------------------
+
+
+def test_diff_reports_policy_divergence():
+    _, trace = _record(duration=2.0)
+    _, ablated = replay(trace, policy="tally_kernel")
+    d = diff_traces(trace, ablated)
+    assert not d.identical
+    assert d.first_divergence is not None
+    assert "divergence" in d.format() or "DIVERGE" in d.format()
+
+
+def test_diff_tolerates_within_atol():
+    _, trace = _record(duration=2.0)
+    d = diff_traces(trace, trace, atol=0.0)
+    assert d.identical and d.first_divergence is None
+
+
+def test_export_without_schema_still_views(tmp_path):
+    """embed_schema=False produces a plain Chrome trace: not lossless,
+    but still ingestible as kernel records for trace_workload."""
+    _, trace = _record(duration=2.0)
+    doc = to_chrome(trace, embed_schema=False)
+    assert "tally_schema" not in doc["otherData"]
+    p = tmp_path / "plain.json"
+    p.write_text(json.dumps(doc))
+    records = load_chrome(p)
+    assert not isinstance(records, Trace) and len(records) > 0
+
+
+# ---------------------------------------------------------------------------
+# Calibration (acceptance: within 1% on a self-generated trace)
+# ---------------------------------------------------------------------------
+
+
+def _calibration_workload():
+    rng = np.random.default_rng(0)
+    ks = []
+    for i in range(60):
+        dur = float(rng.uniform(20e-6, 2e-3))
+        blocks = int(rng.integers(4, 400))
+        eff = min(1.0, blocks / A100.sm_count)
+        if i % 2 == 0:        # clearly compute-bound
+            ks.append(SimKernel(f"c{i}", dur * A100.peak_flops * eff,
+                                dur * A100.hbm_bw / 5, blocks))
+        else:                 # clearly memory-bound
+            ks.append(SimKernel(f"m{i}", dur * A100.peak_flops * eff / 5,
+                                dur * A100.hbm_bw, blocks))
+    return Workload(name="calib", kind="infer", priority=0,
+                    iteration=lambda i: ks, n_kernels=len(ks))
+
+
+def test_calibration_self_consistency():
+    wl = _calibration_workload()
+    arrivals = TrafficTrace(np.asarray([0.0, 0.5, 1.0]), 2.0)
+    rec = TraceRecorder()
+    simulate("tally", wl, [], arrivals, A100, duration=2.0, recorder=rec)
+    fit = fit_device_model(rec.finish())
+    dev = fit.device
+    assert abs(dev.peak_flops / A100.peak_flops - 1.0) < 0.01
+    assert abs(dev.hbm_bw / A100.hbm_bw - 1.0) < 0.01
+    assert abs(dev.launch_overhead / A100.launch_overhead - 1.0) < 0.01
+    assert fit.n_compute > 0 and fit.n_memory > 0
+    assert fit.max_rel_err < 1e-6
+    assert "calibrated" in fit.report(truth=A100)
+
+
+def test_calibrated_model_reprices_trace():
+    """The fitted model prices the recorded kernels back to their
+    recorded durations — the loop that lets ingested real traces replace
+    hand-set constants."""
+    from repro.trace.calibrate import samples_from_trace
+    wl = _calibration_workload()
+    arrivals = TrafficTrace(np.asarray([0.0]), 1.0)
+    rec = TraceRecorder()
+    simulate("tally", wl, [], arrivals, A100, duration=1.0, recorder=rec)
+    trace = rec.finish()
+    dev = fit_device_model(trace).device
+    flops, byts, blocks, durs = samples_from_trace(trace)
+    priced = dev.kernel_times(flops, byts, blocks.astype(np.int64))
+    np.testing.assert_allclose(priced, durs, rtol=1e-6)
+
+
+def test_calibration_requires_metadata():
+    with pytest.raises(ValueError):
+        fit_device_model(
+            (np.zeros(4), np.zeros(4), np.ones(4), np.full(4, 1e-3)))
