@@ -1,0 +1,187 @@
+"""Benchmark regression gate: fresh quick runs vs the committed ledger.
+
+Re-runs the cheap tiers of ``perf_bench`` and ``trace_bench`` and
+compares throughput-style metrics against the committed baselines in
+``benchmarks/results/BENCH_perf.json`` / ``BENCH_trace.json``:
+
+  * a rate metric more than ``--threshold`` (default 30%) BELOW the
+    committed value fails the gate — substrate performance regressed;
+  * simulated *results* (kernel-completion counts per cluster-sweep
+    point, trace event counts) must match the baseline exactly — the
+    engines are deterministic, so any drift means the simulation's
+    physics changed and the ledger must be re-baselined deliberately.
+
+Escape hatch: a commit whose message contains ``[bench-reset]`` skips
+the gate (exit 0) — use it when a PR intentionally changes performance
+characteristics or simulated behaviour, and commit regenerated
+``BENCH_*.json`` files in the same PR. The commit message is taken from
+``--commit-message``, the ``COMMIT_MESSAGE`` environment variable, or
+``git log -1`` (in that order).
+
+    PYTHONPATH=src python -m benchmarks.check_regression
+    PYTHONPATH=src python -m benchmarks.check_regression --threshold 0.5
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+RESET_TAG = "[bench-reset]"
+
+
+def commit_message(explicit: Optional[str]) -> str:
+    if explicit is not None:
+        return explicit
+    env = os.environ.get("COMMIT_MESSAGE")
+    if env:                      # empty/unset falls through to git log
+        return env
+    try:
+        return subprocess.run(
+            ["git", "log", "-1", "--format=%B"], capture_output=True,
+            text=True, check=True, cwd=Path(__file__).resolve().parent,
+        ).stdout
+    except (OSError, subprocess.CalledProcessError):
+        return ""
+
+
+# -- metric extraction --------------------------------------------------------
+
+
+def perf_rates(d: dict) -> Dict[str, float]:
+    """Higher-is-better rates from a BENCH_perf result (any tier)."""
+    out = {"single_device events/s (fast)":
+           d["single_device"]["events_per_s_fast"]}
+    for p in d.get("cluster_sweep", {}).get("points", ()):
+        key = (f"cluster {p['n_devices']}dev/"
+               f"{p['horizon_s']:g}s completions/s")
+        out[key] = p["completions_per_s"]
+    return out
+
+
+def perf_exact(d: dict) -> Dict[str, float]:
+    """Deterministic simulated outcomes from a BENCH_perf result."""
+    # keyed by duration: exact counts only compare between runs of the
+    # identical configuration (the rate metric above is tier-agnostic)
+    sd = d["single_device"]
+    out = {f"single_device {sd['duration_s']:g}s simulated kernels":
+           sd["simulated_kernels"]}
+    for p in d.get("cluster_sweep", {}).get("points", ()):
+        key = (f"cluster {p['n_devices']}dev/"
+               f"{p['horizon_s']:g}s kernel completions")
+        out[key] = p["kernel_completions"]
+    return out
+
+
+def trace_rates(d: dict) -> Dict[str, float]:
+    rt = d["round_trip"]
+    ev = rt["events"]
+    return {f"trace {stage} events/s": ev / rt[f"wall_s_{stage}"]
+            for stage in ("recorded", "export", "ingest", "replay")
+            if rt.get(f"wall_s_{stage}")}
+
+
+def trace_exact(d: dict) -> Dict[str, float]:
+    return {"trace round-trip events": d["round_trip"]["events"]}
+
+
+# -- comparison ---------------------------------------------------------------
+
+
+def compare(fresh_rates: Dict[str, float], base_rates: Dict[str, float],
+            fresh_exact: Dict[str, float], base_exact: Dict[str, float],
+            threshold: float) -> Tuple[List[str], List[str]]:
+    """(failures, report lines). Metrics only present on one side are
+    reported but never fail — tiers legitimately cover different grids."""
+    failures: List[str] = []
+    lines: List[str] = []
+    for name in sorted(set(fresh_rates) | set(base_rates)):
+        f, b = fresh_rates.get(name), base_rates.get(name)
+        if f is None or b is None:
+            lines.append(f"  ~ {name}: only in "
+                         f"{'baseline' if f is None else 'fresh run'}, "
+                         f"skipped")
+            continue
+        ratio = f / b if b else float("inf")
+        mark = "OK"
+        if ratio < 1.0 - threshold:
+            mark = "FAIL"
+            failures.append(
+                f"{name}: {f:,.0f} is {(1 - ratio) * 100:.0f}% below "
+                f"baseline {b:,.0f} (allowed {threshold * 100:.0f}%)")
+        lines.append(f"  {mark:4s} {name}: fresh {f:,.0f} vs "
+                     f"baseline {b:,.0f} ({ratio:.2f}x)")
+    for name in sorted(set(fresh_exact) & set(base_exact)):
+        f, b = fresh_exact[name], base_exact[name]
+        if f != b:
+            failures.append(
+                f"{name}: fresh run produced {f:,.0f}, baseline has "
+                f"{b:,.0f} — simulated results drifted; if intentional, "
+                f"regenerate BENCH_*.json and tag the commit "
+                f"{RESET_TAG}")
+            lines.append(f"  FAIL {name}: {f:,.0f} != {b:,.0f}")
+        else:
+            lines.append(f"  OK   {name}: {f:,.0f} (exact)")
+    return failures, lines
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--threshold", type=float, default=0.30,
+                    help="max tolerated fractional slowdown (default 0.30)")
+    ap.add_argument("--results-dir",
+                    default=str(Path(__file__).resolve().parent / "results"),
+                    help="directory with the committed BENCH_*.json")
+    ap.add_argument("--commit-message", default=None,
+                    help=f"message to scan for {RESET_TAG} "
+                         f"(default: env COMMIT_MESSAGE, then git log -1)")
+    args = ap.parse_args(argv)
+
+    msg = commit_message(args.commit_message)
+    if RESET_TAG in msg:
+        print(f"{RESET_TAG} found in commit message — regression gate "
+              f"skipped (remember to commit regenerated BENCH_*.json)")
+        return 0
+
+    results = Path(args.results_dir)
+    base_perf = json.loads((results / "BENCH_perf.json").read_text())
+    base_trace = json.loads((results / "BENCH_trace.json").read_text())
+
+    from benchmarks import perf_bench, trace_bench
+
+    with tempfile.TemporaryDirectory() as td:
+        fresh_perf = perf_bench.main(
+            ["--quick", "--skip-reference",
+             "--output", str(Path(td) / "perf.json")])
+        fresh_trace = trace_bench.main(
+            ["--quick", "--output", str(Path(td) / "trace.json")])
+
+    failures, lines = compare(
+        {**perf_rates(fresh_perf), **trace_rates(fresh_trace)},
+        {**perf_rates(base_perf), **trace_rates(base_trace)},
+        {**perf_exact(fresh_perf), **trace_exact(fresh_trace)},
+        {**perf_exact(base_perf), **trace_exact(base_trace)},
+        args.threshold)
+
+    print("\n== check_regression: fresh quick tiers vs committed ledger ==")
+    print("\n".join(lines))
+    if failures:
+        print(f"\nREGRESSION GATE FAILED ({len(failures)}):")
+        for f in failures:
+            print(f"  - {f}")
+        print(f"\nIf this change is intentional, regenerate the ledger "
+              f"(PYTHONPATH=src python -m benchmarks.perf_bench; "
+              f"... -m benchmarks.trace_bench --quick) and include "
+              f"{RESET_TAG} in the commit message.")
+        return 1
+    print("\nregression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -39,11 +39,16 @@ from repro.core.placement import PLACEMENT_POLICIES
 
 def _cold_caches() -> None:
     """Clear the process-wide memos (launch pricing, placement turnaround
-    estimates) before each timed run, so both engines are measured the way
-    a fresh process runs them — otherwise whichever engine runs second
-    inherits the first one's warm caches and the comparison is skewed."""
+    estimates, fleet isolated-baseline runs) before each timed run, so both
+    engines are measured the way a fresh process runs them — otherwise
+    whichever engine runs second inherits the first one's warm caches and
+    the comparison is skewed."""
+    from repro.core import fleet
+
     simulator._PRICE_MEMO.clear()
     placement._ESTIMATE_MEMO.clear()
+    fleet._ISO_MEMO.clear()
+    fleet._ISO_PINS.clear()
 
 
 # ---------------------------------------------------------------------------
@@ -91,6 +96,32 @@ def single_device(duration: float, skip_reference: bool) -> Dict[str, float]:
                                          if wall_ref else 0.0)
         out["speedup"] = wall_ref / wall_fast if wall_fast else 0.0
     return out
+
+
+# ---------------------------------------------------------------------------
+# Tier 3: fig9 cluster-scale sweep (event-driven fleet core)
+# ---------------------------------------------------------------------------
+
+
+def fig9_cluster_tier(quick: bool) -> Dict[str, object]:
+    """Cluster-scale substrate throughput: the fig9 sweep's simulated
+    kernel completions per wall-second (event-driven fleet core). The
+    headline acceptance bar — >= 10M completions/s at a 100+ device
+    point — is asserted by the full tier; the quick tier records small
+    fleets for the regression gate."""
+    from benchmarks.fig9_cluster import (FULL_DURATION, FULL_SIZES,
+                                         QUICK_DURATION, QUICK_SIZES,
+                                         cluster_sweep)
+
+    _cold_caches()
+    sweep = cluster_sweep(QUICK_SIZES if quick else FULL_SIZES,
+                          duration=QUICK_DURATION if quick
+                          else FULL_DURATION)
+    if not quick:
+        big = max((r["completions_per_s"] for r in sweep["points"]
+                   if r["n_devices"] >= 100), default=0.0)
+        sweep["peak_100dev_completions_per_s"] = big
+    return sweep
 
 
 # ---------------------------------------------------------------------------
@@ -150,14 +181,16 @@ def main(argv=None) -> dict:
         sweep = fig8_sweep((2, 4), tuple(MIXES), PLACEMENT_POLICIES,
                            horizon=24.0, skip_reference=args.skip_reference)
         tier = "full"
+    cluster = fig9_cluster_tier(quick=args.quick)
 
     result = {
-        "schema": 1,
+        "schema": 2,
         "tier": tier,
         "python": platform.python_version(),
         "machine": platform.machine(),
         "single_device": sd,
         "fig8_sweep": sweep,
+        "cluster_sweep": cluster,
         "bench_wall_s": time.time() - t0,
     }
     RESULTS.mkdir(parents=True, exist_ok=True)
@@ -174,7 +207,11 @@ def main(argv=None) -> dict:
              "wall_s_fast": sweep["wall_s_fast"],
              "wall_s_reference": sweep.get("wall_s_reference"),
              "speedup": sweep.get("speedup"),
-             "events_per_s": None}]
+             "events_per_s": None},
+            {"bench": f"cluster_sweep[{len(cluster['points'])}]",
+             "wall_s_fast": sum(p["wall_s"] for p in cluster["points"]),
+             "wall_s_reference": None, "speedup": None,
+             "events_per_s": cluster["peak_completions_per_s"]}]
     print(fmt_table(rows, ("bench", "wall_s_fast", "wall_s_reference",
                            "speedup", "events_per_s"), floatfmt="{:,.2f}"))
     print(f"\nwrote {args.output}  ({result['bench_wall_s']:.0f}s)")

@@ -2,7 +2,7 @@
 
 ``python -m benchmarks.run``            quick pass over every benchmark
 ``python -m benchmarks.run --full``     full grids (hours; results cached)
-``python -m benchmarks.run --dry-run``  import + enumerate only (CI smoke)
+``python -m benchmarks.run --dry-run``  enumerate the plan only (CI smoke)
 
 Individual benchmarks: ``python -m benchmarks.<name>`` — see the table in
 DESIGN.md §6. Roofline reads the dry-run artifacts (run
@@ -11,42 +11,42 @@ DESIGN.md §6. Roofline reads the dry-run artifacts (run
 from __future__ import annotations
 
 import argparse
+import importlib
 import sys
 import time
+
+# (module, quick args, full args) — modules import lazily so --dry-run
+# stays instant and dependency-free (CI runs it before anything heavy)
+PLAN = [
+    ("benchmarks.table1_turnaround", None, None),   # main() takes no argv
+    ("benchmarks.fig5_end_to_end", ["--quick"], []),
+    ("benchmarks.fig6_load_sensitivity", ["--quick"], []),
+    ("benchmarks.fig6_load_sensitivity", ["--timeseries"], ["--timeseries"]),
+    ("benchmarks.fig7a_scalability", [], []),
+    ("benchmarks.fig7b_decomposition", [], []),
+    ("benchmarks.fig7c_threshold", ["--quick"], []),
+    ("benchmarks.fig8_fleet", [], ["--full"]),
+    ("benchmarks.fig9_cluster", ["--quick"], []),
+    ("benchmarks.overheads", [], []),
+    ("benchmarks.trace_bench", ["--quick"], []),
+]
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--dry-run", action="store_true",
-                    help="import every benchmark module and list the plan "
-                         "without running anything (CI smoke check)")
+                    help="list the plan without importing or running "
+                         "anything heavyweight (CI smoke check)")
     args = ap.parse_args(argv)
     quick = not args.full
     t0 = time.time()
 
-    from benchmarks import (fig5_end_to_end, fig6_load_sensitivity,
-                            fig7a_scalability, fig7b_decomposition,
-                            fig7c_threshold, fig8_fleet, overheads,
-                            roofline, table1_turnaround, trace_bench)
-
-    plan = [
-        (fig5_end_to_end.main, ["--quick"] if quick else []),
-        (fig6_load_sensitivity.main, ["--quick"] if quick else []),
-        (fig6_load_sensitivity.main, ["--timeseries"]),
-        (fig7a_scalability.main, []),
-        (fig7b_decomposition.main, []),
-        (fig7c_threshold.main, ["--quick"] if quick else []),
-        (fig8_fleet.main, [] if quick else ["--full"]),
-        (overheads.main, []),
-        (trace_bench.main, ["--quick"] if quick else []),
-    ]
-
     if args.dry_run:
-        print("# dry run: all benchmark modules imported OK; plan:")
-        print("  benchmarks.table1_turnaround.main()")
-        for fn, fargs in plan:
-            print(f"  {fn.__module__}.main({fargs})")
+        print("# dry run; plan:")
+        for mod, qargs, fargs in PLAN:
+            sel = qargs if quick else fargs
+            print(f"  {mod}.main({sel if sel is not None else ''})")
         print("  benchmarks.roofline.main([])  (needs dry-run artifacts)")
         return 0
 
@@ -55,11 +55,12 @@ def main(argv=None) -> int:
     print("#   --refresh on individual modules to recompute)")
     print("#" * 70)
 
-    table1_turnaround.main()
-    for fn, fargs in plan:
-        fn(fargs)
+    for mod, qargs, fargs in PLAN:
+        sel = qargs if quick else fargs
+        fn = importlib.import_module(mod).main
+        fn() if sel is None else fn(sel)
     try:
-        roofline.main([])
+        importlib.import_module("benchmarks.roofline").main([])
     except Exception as e:                     # noqa: BLE001
         print(f"[roofline] skipped: {e} (run repro.launch.dryrun --all)")
 

@@ -24,10 +24,31 @@ admission + placement controller:
     (highest profiled turnaround) is migrated to another device, carrying
     its block watermark (``BEProgress``) so no completed work is lost.
 
-All devices advance in lockstep between *decision points* (job arrivals,
-periodic SLO checks). Between decision points each device runs its own
-discrete-event loop, so a 1-GPU fleet with everything resident at t=0
-reproduces ``simulate("tally", ...)`` event-for-event (guarded by
+The controller advances devices between *decision points* (job arrivals,
+periodic SLO checks, BE departures, node failures). Two interchangeable
+cores drive the clock:
+
+  - **Event-driven (default).** Every device reports
+    ``DeviceEngine.next_activity()`` — the earliest instant advancing it
+    could do anything beyond moving its clock — into one fleet-wide
+    priority queue. At each decision point only the *due* devices (next
+    activity at or before the point) are advanced, in device-index order;
+    quiescent and idle devices are skipped outright, and their clocks
+    catch up lazily the next time the controller needs them (an attach,
+    a detach, an occupancy read). Admission retries are gated on a fleet
+    revision counter (placement feasibility only changes when a client
+    attaches or detaches), and per-device SLO windows for HP-only devices
+    are discarded lazily at the next BE attach instead of at every point.
+  - **Lockstep (reference).** ``event_driven=False`` keeps the original
+    loop: every device advances to every decision point.
+
+The two cores are **bit-for-bit equivalent** — same placements,
+migrations, reports, and (when recording) the same trace, event for
+event — guarded by ``tests/test_fleet_events.py`` the same way
+``tests/test_fast_path.py`` guards the single-device fast path. Between
+decision points each device runs its own discrete-event loop, so a 1-GPU
+fleet with everything resident at t=0 reproduces
+``simulate("tally", ...)`` event-for-event (guarded by
 ``tests/test_fleet.py::test_single_device_equivalence``).
 
 Fleet-level aggregates:
@@ -104,6 +125,18 @@ def be_job(name: str, workload: Workload, *, arrival: float = 0.0,
                    arrival=arrival, duration=duration)
 
 
+@dataclass(frozen=True)
+class DeviceFailure:
+    """A node loss at ``time``: the device freezes at the failure instant
+    (the engine cannot detach an HP service, so its history simply ends
+    there), resident BE jobs re-enter the admission queue carrying their
+    watermarked progress (like a migration), and the device is excluded
+    from placement for the rest of the run."""
+
+    time: float
+    device: int
+
+
 # ---------------------------------------------------------------------------
 # Per-device fleet state
 # ---------------------------------------------------------------------------
@@ -116,6 +149,13 @@ class _IsoRef:
 
     p99: float
     count: int
+
+
+# process-wide memo for isolated baselines: (workload id, device, span,
+# threshold, fast, trace duration, trace bytes) -> _IsoRef. _ISO_PINS keeps
+# the keyed workload objects alive so ids are never recycled.
+_ISO_MEMO: Dict[Tuple, _IsoRef] = {}
+_ISO_PINS: Dict[int, Workload] = {}
 
 
 class ManagedDevice:
@@ -131,6 +171,13 @@ class ManagedDevice:
         self.lat_seen = 0              # watermark into book latencies
         self.window = WindowQuantile(0.99)   # streaming SLO window (ring+P²)
         self.iso: Optional[_IsoRef] = None
+        self.failed = False
+        self.failed_at = float("nan")
+        # event-core bookkeeping (inert on the lockstep path)
+        self._synced = -1.0      # last decision point this engine reached
+        self._act_time = 0.0     # tag of the live fleet-queue entry
+        self._lat_prev = 0       # latency count before the sync at _synced
+        self._deactivated_at = -1.0  # point the last resident BE left
 
     @property
     def dev(self) -> DeviceModel:
@@ -274,6 +321,29 @@ class FleetResult:
 # ---------------------------------------------------------------------------
 
 
+class _EventState:
+    """Per-run state of the event-driven core.
+
+    ``queue`` holds ``(next_activity, device index, tag)`` entries; the tag
+    is the activity value at push time, and an entry is live only while it
+    equals the device's ``_act_time`` (lazy invalidation — rescheduling a
+    device stales its older entries). Ties break on device index, which
+    fixes the advance order deterministically and identically to the
+    lockstep core's index-ordered advance loop."""
+
+    __slots__ = ("queue", "rev", "blocked", "dep_heap", "job_device",
+                 "pending_kinds", "prev_point")
+
+    def __init__(self) -> None:
+        self.queue: List[Tuple[float, int, float]] = []
+        self.rev = 0           # bumps on every attach / detach / failure
+        self.blocked: Dict[str, int] = {}   # job kind -> rev found infeasible
+        self.dep_heap: List[Tuple[float, str]] = []  # (departure time, job)
+        self.job_device: Dict[str, int] = {}         # BE job -> device index
+        self.pending_kinds = {k: 0 for k in JOB_KINDS}
+        self.prev_point = -1.0   # decision point before the current one
+
+
 class FleetSimulator:
     """N Tally-scheduled GPUs behind an admission + placement controller."""
 
@@ -283,9 +353,18 @@ class FleetSimulator:
                  device_models: Optional[List[DeviceModel]] = None,
                  horizon: float = 60.0, check_interval: float = 5.0,
                  threshold: float = 0.0316e-3, max_be_per_device: int = 4,
-                 min_window: int = 20, fast: bool = True, recorder=None):
+                 min_window: int = 20, fast: bool = True, recorder=None,
+                 event_driven: bool = True,
+                 failures: Optional[List[DeviceFailure]] = None):
         if device_models is not None and len(device_models) != n_devices:
             raise ValueError("device_models length must equal n_devices")
+        self.event_driven = event_driven
+        self.failures = sorted(failures or [],
+                               key=lambda f: (f.time, f.device))
+        for f in self.failures:
+            if not 0 <= f.device < n_devices:
+                raise ValueError(f"failure device {f.device} out of range "
+                                 f"for a {n_devices}-device fleet")
         models = device_models or [dev] * n_devices
         if isinstance(policy, str):
             # the interference-aware policy must score with the same
@@ -317,14 +396,71 @@ class FleetSimulator:
         self._disruption = getattr(self.policy, "estimator",
                                    None) or TurnaroundEstimator(threshold)
         self._ran = False
+        self._evt: Optional[_EventState] = None
+
+    # -- event-core plumbing ---------------------------------------------------
+
+    def _sync(self, d: ManagedDevice, t: float) -> None:
+        """Event core: bring one device to decision point ``t`` exactly as
+        the lockstep advance-all loop would (strict below the horizon), at
+        most once per point. The latency count is snapshotted first so a
+        mid-pass migration can reconstruct "discarded at the previous
+        point" for a destination the index-ordered pass had not reached
+        yet. No-op on the lockstep path and for failed (frozen) devices."""
+        if self._evt is None or d.failed or d._synced == t:
+            return
+        if d.hp_job is not None:
+            if d.iso is not None and not d.be_jobs:
+                # potential migration destination: "discarded at the
+                # previous point" needs the latency count at that point,
+                # which an engine left idle for many points only
+                # materializes by actually advancing there first
+                d.engine.advance(self._evt.prev_point, strict=True)
+            d._lat_prev = len(d.engine.book.latency.latencies)
+        d.engine.advance(t, strict=(t < self.horizon))
+        d._synced = t
+        self._schedule(d)
+
+    def _schedule(self, d: ManagedDevice) -> None:
+        """Refresh ``d``'s entry in the fleet-wide activity queue (after a
+        sync, attach, or detach changed when it next needs the clock).
+
+        Only SLO-checkable devices (HP service + resident BE jobs) arm an
+        entry: they are the only ones the per-point pass must observe at
+        every decision point they are active at. Everyone else is touched
+        strictly on demand — attach, detach, departure, failure,
+        occupancy-reading placement views, and the horizon all sync
+        explicitly — so an hp-only device advances in a handful of bulk
+        strides instead of once per fleet-wide decision point."""
+        evt = self._evt
+        if evt is None or d.failed:
+            return
+        if d.hp_job is None or d.iso is None or not d.be_jobs:
+            d._act_time = math.inf    # stale out any queued entry
+            return
+        na = d.engine.next_activity()
+        d._act_time = na
+        if na < self.horizon:     # the horizon point advances all devices
+            heapq.heappush(evt.queue, (na, d.index, na))
 
     # -- placement plumbing ----------------------------------------------------
 
     def _views(self, now: float,
                exclude: Optional[int] = None) -> List[DeviceView]:
+        if self._evt is not None and self.policy.reads_occupancy:
+            # occupancy() reads the measured HP busy fraction of warm
+            # services; those engines must be at `now`, like after the
+            # lockstep advance-all, before any view is built. Structural
+            # policies (reads_occupancy=False) never look at the value,
+            # so the stale snapshot below is unobservable and the syncs
+            # are skipped entirely
+            for d in self.devices:
+                if (d.hp_job is not None and not d.failed
+                        and now - d.hp_placed_at >= self.check_interval):
+                    self._sync(d, now)
         views = []
         for d in self.devices:
-            if d.index == exclude:
+            if d.index == exclude or d.failed:
                 continue
             views.append(DeviceView(
                 index=d.index, dev=d.dev, has_hp=d.hp_job is not None,
@@ -346,13 +482,24 @@ class FleetSimulator:
         # (scale_to_load compresses TIME by the rate factor)
         base = maf2_like_trace(duration=span, mean_rate=job.load / iso,
                                seed=job.seed)
+        if not len(base.arrivals):
+            # a service admitted close to the horizon can draw zero
+            # arrivals in its remaining span; run it request-less rather
+            # than dividing by an empty trace's rate
+            return base
         return scale_to_load(base, iso, job.load)
 
     def _place(self, job: JobSpec, now: float) -> bool:
         idx = self.policy.place(job.kind, job.workload, self._views(now))
         if idx is None:
+            if self._evt is not None:
+                # feasibility depends only on attach/detach structure
+                # (HP slot free, BE headroom), so this kind cannot place
+                # again until the fleet revision changes
+                self._evt.blocked[job.kind] = self._evt.rev
             return False
         d = self.devices[idx]
+        self._sync(d, now)       # event core: engine at `now` before attach
         if job.kind == "hp_service":
             trace = self._service_trace(job, d, now)
             d.engine.attach_hp(job.workload, trace, offset=now,
@@ -360,64 +507,181 @@ class FleetSimulator:
             d.hp_job, d.hp_placed_at = job, now
             d.lat_seen = 0
             d.window.reset()
-            # isolated reference: same trace on an empty device
-            iso = simulate("tally", job.workload, [], trace, d.dev,
-                           duration=self.horizon - now,
-                           threshold=self.threshold, fast=self.fast)
-            d.iso = _IsoRef(p99=iso.latency.p99(), count=iso.latency.count)
+            # isolated reference: same trace on an empty device. Memoized
+            # on the exact inputs — cluster scenarios place many services
+            # sharing one workload object and trace shape (the paper
+            # replays a single MAF2 function for every service), and the
+            # baseline is deterministic given these
+            key = (id(job.workload), d.dev, self.horizon - now,
+                   self.threshold, self.fast, trace.duration,
+                   trace.arrivals.tobytes())
+            ref = _ISO_MEMO.get(key)
+            if ref is None:
+                iso = simulate("tally", job.workload, [], trace, d.dev,
+                               duration=self.horizon - now,
+                               threshold=self.threshold, fast=self.fast)
+                ref = _IsoRef(p99=iso.latency.p99(),
+                              count=iso.latency.count)
+                _ISO_MEMO[key] = ref
+                _ISO_PINS[id(job.workload)] = job.workload
+            d.iso = ref
         else:
+            if (self._evt is not None and d.hp_job is not None
+                    and d.iso is not None and not d.be_jobs
+                    and d._deactivated_at != now):
+                # the lockstep core discards an hp-only device's SLO window
+                # at every decision point; lazily, only the last discard —
+                # at BE attach — is observable, so materialize exactly that
+                # one. A device whose last BE left at this very point was
+                # fed (not discarded) by this point's SLO pass: keep it.
+                d.lat_seen = len(d.engine.book.latency.latencies)
+                d.window.reset()
             # clients (and per-device books) are keyed by workload name, so
             # run each BE job under its own job name — two jobs may share
             # one workload definition
             wl = job.workload
             if wl.name != job.name:
                 wl = dataclasses.replace(wl, name=job.name)
-            d.engine.attach_be(wl, job_id=job.name)
+            carried = self._failover.pop(job.name, None)
+            if carried is not None:          # re-queued off a failed node:
+                d.engine.attach_be(client=carried)   # progress carries over
+            else:
+                d.engine.attach_be(wl, job_id=job.name)
             d.be_jobs[job.name] = job
             d.be_placed_at[job.name] = now
             if job.duration is not None:    # departure becomes a decision
                 self._add_point(now + job.duration)     # point (placed+dur)
+                if self._evt is not None and now + job.duration <= self.horizon:
+                    heapq.heappush(self._evt.dep_heap,
+                                   (now + job.duration, job.name))
+            if self._evt is not None:
+                self._evt.job_device[job.name] = idx
         self._placements.append((now, job.name, idx))
+        if self._evt is not None:
+            self._evt.rev += 1
+            self._schedule(d)
         return True
 
     # -- migration -------------------------------------------------------------
 
     def _check_slo(self, now: float) -> None:
         for d in self.devices:
-            if d.hp_job is None or d.iso is None:
+            if d.failed or d.hp_job is None or d.iso is None:
                 continue
             if not d.be_jobs:
                 # nothing to migrate: consume the clean history so a BE
                 # attached later is judged only on post-attach requests
                 d.discard_window()
                 continue
-            d.feed_window()
-            if d.window.count < self.min_window:
-                continue                     # accumulate until checkable
-            bound = d.hp_job.slo_factor * d.iso.p99
-            est = d.window_p99()
-            d.consume_window()
-            if not math.isfinite(bound) or est <= bound:
+            self._check_one(d, now)
+
+    def _check_one(self, d: ManagedDevice, now: float) -> bool:
+        """SLO check for one hp+BE device (shared by both cores); returns
+        True when a migration happened, with the destination in
+        ``self._last_dst``."""
+        d.feed_window()
+        if d.window.count < self.min_window:
+            return False                     # accumulate until checkable
+        bound = d.hp_job.slo_factor * d.iso.p99
+        est = d.window_p99()
+        d.consume_window()
+        if not math.isfinite(bound) or est <= bound:
+            return False
+        # violation: evict the most disruptive BE job, carrying progress
+        victim = max(d.be_jobs,
+                     key=lambda n: self._disruption(
+                         d.be_jobs[n].workload, d.dev))
+        job = d.be_jobs[victim]
+        idx = self.policy.place("be_train", job.workload,
+                                self._views(now, exclude=d.index))
+        if idx is None:
+            return False           # nowhere to go: stay (next check retries)
+        dst = self.devices[idx]
+        activate = (self._evt is not None and dst.hp_job is not None
+                    and dst.iso is not None and not dst.be_jobs)
+        client = d.engine.detach_be(victim)
+        del d.be_jobs[victim]
+        placed_at = d.be_placed_at.pop(victim)
+        if not d.be_jobs:
+            d._deactivated_at = now
+        if activate:
+            # replicate the lockstep pass's last discard of the (so far
+            # hp-only) destination: at this point for a device the
+            # index-ordered pass already visited, at the previous point
+            # otherwise. _sync staged the destination through the
+            # previous point, so _lat_prev is exactly the latency count
+            # the lockstep discard left behind there.
+            self._sync(dst, now)
+            dst.lat_seen = (dst._lat_prev if idx > d.index else
+                            len(dst.engine.book.latency.latencies))
+            dst.window.reset()
+        else:
+            self._sync(dst, now)
+        dst.engine.attach_be(client=client)
+        dst.be_jobs[victim] = job
+        dst.be_placed_at[victim] = placed_at
+        self.migrations.append(Migration(now, victim, d.index, idx))
+        if self.recorder is not None:
+            self.recorder.migrate(now, victim, d.index, idx)
+        if self._evt is not None:
+            self._evt.rev += 1
+            self._evt.job_device[victim] = idx
+            self._schedule(d)
+            self._schedule(dst)
+        self._last_dst = dst
+        self._last_dst_activated = activate
+        return True
+
+    def _check_slo_events(self, now: float) -> None:
+        """Index-ordered SLO pass over exactly the devices the lockstep
+        pass would touch non-trivially at this point. hp-only devices are
+        not discarded here (materialized at the next BE attach, see
+        ``_place``); active devices whose engines had no activity since
+        the previous point would feed zero new latencies and cannot have
+        reached ``min_window`` (every earlier point checked them), so only
+        devices synced at ``now`` can act. A migration that activates a
+        higher-index hp-only destination inserts it into the worklist
+        where the lockstep pass would encounter it."""
+        work = [d for d in self.devices
+                if d._synced == now and not d.failed
+                and d.hp_job is not None and d.iso is not None and d.be_jobs]
+        i = 0
+        while i < len(work):
+            d = work[i]
+            i += 1
+            if self._check_one(d, now) and self._last_dst_activated:
+                dst = self._last_dst
+                if dst.index > d.index:
+                    j = i
+                    while j < len(work) and work[j].index < dst.index:
+                        j += 1
+                    work.insert(j, dst)
+
+    def _fail_devices(self, now: float) -> None:
+        """Apply node failures due by ``now`` (both cores, identical
+        order: failure time, then device index)."""
+        while (self._fail_i < len(self.failures)
+               and self.failures[self._fail_i].time <= now):
+            f = self.failures[self._fail_i]
+            self._fail_i += 1
+            d = self.devices[f.device]
+            if d.failed:
                 continue
-            # violation: evict the most disruptive BE job, carrying progress
-            victim = max(d.be_jobs,
-                         key=lambda n: self._disruption(
-                             d.be_jobs[n].workload, d.dev))
-            job = d.be_jobs[victim]
-            idx = self.policy.place("be_train", job.workload,
-                                    self._views(now, exclude=d.index))
-            if idx is None:
-                continue               # nowhere to go: stay (next check retries)
-            client = d.engine.detach_be(victim)
-            del d.be_jobs[victim]
-            placed_at = d.be_placed_at.pop(victim)
-            dst = self.devices[idx]
-            dst.engine.attach_be(client=client)
-            dst.be_jobs[victim] = job
-            dst.be_placed_at[victim] = placed_at
-            self.migrations.append(Migration(now, victim, d.index, idx))
-            if self.recorder is not None:
-                self.recorder.migrate(now, victim, d.index, idx)
+            self._sync(d, now)     # event core; lockstep already advanced
+            d.failed = True
+            d.failed_at = now
+            for name in list(d.be_jobs):
+                client = d.engine.detach_be(name)
+                job = d.be_jobs.pop(name)
+                d.be_placed_at.pop(name, None)
+                self._failover[name] = client
+                self._pending.append(job)
+                if self._evt is not None:
+                    self._evt.job_device.pop(name, None)
+                    self._evt.pending_kinds[job.kind] += 1
+            if self._evt is not None:
+                self._evt.rev += 1
+                d._act_time = math.inf   # stale out any queued entry
 
     def _depart_finished(self, now: float) -> None:
         for d in self.devices:
@@ -428,6 +692,38 @@ class FleetSimulator:
                 d.engine.detach_be(n)
                 del d.be_jobs[n]
                 self._departed[n] = d.index
+            if done and not d.be_jobs:
+                d._deactivated_at = now
+
+    def _depart_finished_events(self, now: float) -> None:
+        """Event core: departures pop off a heap keyed at placement time
+        (placed_at + duration) instead of scanning every device; the
+        per-device condition and detach order match ``_depart_finished``
+        exactly (device index, then residency order)."""
+        evt = self._evt
+        assert evt is not None
+        due: set = set()
+        while evt.dep_heap and evt.dep_heap[0][0] <= now:
+            _, name = heapq.heappop(evt.dep_heap)
+            idx = evt.job_device.get(name)
+            if idx is not None:     # stale entries (failover re-placements
+                due.add(idx)        # re-key the heap) resolve by condition
+        for idx in sorted(due):
+            d = self.devices[idx]
+            done = [n for n, j in d.be_jobs.items()
+                    if j.duration is not None
+                    and now >= d.be_placed_at[n] + j.duration]
+            for n in done:
+                self._sync(d, now)
+                d.engine.detach_be(n)
+                del d.be_jobs[n]
+                self._departed[n] = d.index
+                evt.job_device.pop(n, None)
+                evt.rev += 1
+            if done:
+                if not d.be_jobs:
+                    d._deactivated_at = now
+                self._schedule(d)
 
     # -- main loop -------------------------------------------------------------
 
@@ -450,6 +746,8 @@ class FleetSimulator:
                 "check_interval": self.check_interval,
                 "threshold": self.threshold, "max_be_per_device": self.max_be,
                 "min_window": self.min_window, "fast": self.fast,
+                "event_driven": self.event_driven,
+                "failures": [[f.time, f.device] for f in self.failures],
                 "devices": [dataclasses.asdict(d.dev) for d in self.devices],
             })
             for job in jobs:
@@ -464,13 +762,28 @@ class FleetSimulator:
         self.migrations: List[Migration] = []
         self._placements: List[Tuple[float, str, int]] = []
         self._departed: Dict[str, int] = {}
-        pending: Deque[JobSpec] = deque()
+        self._failover: Dict[str, object] = {}
+        self._fail_i = 0
+        self._pending: Deque[JobSpec] = deque()
         arrivals = sorted(jobs, key=lambda j: (j.arrival, j.name))
         n_ticks = int(math.ceil(self.horizon / self.check_interval))
         self._points = [j.arrival for j in jobs if j.arrival <= self.horizon]
         self._points += [i * self.check_interval for i in range(1, n_ticks)]
+        self._points += [f.time for f in self.failures
+                         if f.time <= self.horizon]
         self._points.append(self.horizon)
         heapq.heapify(self._points)
+        if self.event_driven:
+            self._run_events(arrivals)
+        else:
+            self._run_lockstep(arrivals)
+        for d in self.devices:
+            d.engine.finalize()
+        return self._collect(jobs)
+
+    def _run_lockstep(self, arrivals: List[JobSpec]) -> None:
+        """Reference core: every device advances to every decision point."""
+        pending = self._pending
         arr_i = 0
         prev = -1.0
         while self._points:
@@ -483,7 +796,9 @@ class FleetSimulator:
             # the horizon is still recorded) — the 1-GPU equivalence
             # contract depends on both
             for d in self.devices:
-                d.engine.advance(t, strict=(t < self.horizon))
+                if not d.failed:
+                    d.engine.advance(t, strict=(t < self.horizon))
+            self._fail_devices(t)
             if t > 0.0:
                 self._check_slo(t)
                 self._depart_finished(t)
@@ -497,10 +812,67 @@ class FleetSimulator:
                                              j.arrival)):
                 if t >= self.horizon or not self._place(job, t):
                     still.append(job)
-            pending = deque(still)
-        for d in self.devices:
-            d.engine.finalize()
-        return self._collect(jobs)
+            pending.clear()
+            pending.extend(still)
+
+    def _run_events(self, arrivals: List[JobSpec]) -> None:
+        """Event-driven core: per-device next-activity times feed one
+        fleet-wide priority queue; only due devices advance at each
+        decision point (index order — the same order the lockstep loop
+        advances them, so even a recorded trace is bit-identical)."""
+        evt = self._evt = _EventState()
+        pending = self._pending
+        pk = evt.pending_kinds
+        queue = evt.queue
+        devices = self.devices
+        arr_i = 0
+        prev = -1.0
+        while self._points:
+            t = heapq.heappop(self._points)
+            if t <= prev:                        # dedup; strict time order
+                continue
+            evt.prev_point = prev
+            prev = t
+            if t >= self.horizon:
+                # the final advance is non-strict and must consume the
+                # event crossing the horizon on every device, exactly
+                # like the lockstep horizon point
+                for d in devices:
+                    self._sync(d, t)
+            else:
+                due: set = set()
+                while queue and queue[0][0] <= t:
+                    na, i, tag = heapq.heappop(queue)
+                    if tag == devices[i]._act_time:   # live entry
+                        due.add(i)
+                for i in sorted(due):
+                    self._sync(devices[i], t)
+            self._fail_devices(t)
+            if t > 0.0:
+                self._check_slo_events(t)
+                self._depart_finished_events(t)
+            while arr_i < len(arrivals) and arrivals[arr_i].arrival <= t:
+                pending.append(arrivals[arr_i])
+                pk[arrivals[arr_i].kind] += 1
+                arr_i += 1
+            # admission pass only when some pending kind could place (a
+            # kind that failed at the current fleet revision fails again:
+            # skipping the retry is exact, not heuristic)
+            if (pending and t < self.horizon
+                    and any(pk[k] and evt.blocked.get(k) != evt.rev
+                            for k in JOB_KINDS)):
+                still: List[JobSpec] = []
+                for job in sorted(pending,
+                                  key=lambda j: (j.kind != "hp_service",
+                                                 j.arrival)):
+                    if (evt.blocked.get(job.kind) == evt.rev
+                            or not self._place(job, t)):
+                        still.append(job)
+                    else:
+                        pk[job.kind] -= 1
+                pending.clear()
+                pending.extend(still)
+        self._evt = None
 
     def _add_point(self, t: float) -> None:
         """Register a future decision point discovered mid-run (a BE
@@ -539,13 +911,14 @@ class FleetSimulator:
         assert iso is not None
         bound = job.slo_factor * iso.p99
         good = sum(1 for x in lats.latencies if x <= bound)
+        end = d.failed_at if d.failed else self.horizon
         return ServiceReport(
             name=job.name, device=idx, placed_at=t0,
             requests_done=lats.count, p99=lats.p99(), ideal_p99=iso.p99,
             slo_factor=job.slo_factor,
             slo_attainment=good / lats.count if lats.count else 0.0,
             norm_goodput=good / iso.count if iso.count else 0.0,
-            active_span=self.horizon - t0,
+            active_span=end - t0,
         )
 
     def _be_report(self, job: JobSpec,

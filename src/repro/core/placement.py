@@ -57,6 +57,12 @@ class PlacementPolicy:
     """Chooses a device index for a job, or None (stay queued)."""
 
     name = "base"
+    # True when place() reads the views' measured hp_occupancy. Structural
+    # policies (feasibility only) set False, which licenses the
+    # event-driven fleet core to build views without first syncing every
+    # warm HP engine to the decision point — the value is stale but never
+    # observed, so decisions (and therefore runs) are unchanged.
+    reads_occupancy = True
 
     def place(self, kind: str, workload: Workload,
               views: Sequence[DeviceView]) -> Optional[int]:
@@ -72,6 +78,7 @@ class FirstFit(PlacementPolicy):
     """Lowest-index device that satisfies the feasibility constraints."""
 
     name = "first_fit"
+    reads_occupancy = False
 
     def place(self, kind: str, workload: Workload,
               views: Sequence[DeviceView]) -> Optional[int]:

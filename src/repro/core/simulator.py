@@ -28,6 +28,7 @@ Policies
 """
 from __future__ import annotations
 
+import bisect
 import heapq
 import itertools
 import math
@@ -201,7 +202,10 @@ class SimExecutor:
         self.rec = None          # optional trace DeviceRecorder (read-only
         #                          hooks; None keeps every path branch-free)
         self.events: List[Tuple[float, int, int, Any]] = []
-        self._arr_heap: List[float] = []     # mirror of queued ARRIVAL times
+        # mirror of queued ARRIVAL times: sorted list + consumed cursor
+        # (arrivals pop in time order, so consumption is an index bump)
+        self._arr_times: List[float] = []
+        self._arr_i = 0
         self._seq = itertools.count()
         self._launch_ids = itertools.count()
         self.inflight: Optional[_Inflight] = None
@@ -216,7 +220,7 @@ class SimExecutor:
     def _push(self, t: float, kind: int, payload: Any) -> None:
         heapq.heappush(self.events, (t, next(self._seq), kind, payload))
         if kind == ARRIVAL:
-            heapq.heappush(self._arr_heap, t)
+            bisect.insort(self._arr_times, t, lo=self._arr_i)
 
     def now(self) -> float:
         return self.clock
@@ -227,9 +231,10 @@ class SimExecutor:
 
     def next_arrival_time(self) -> float:
         """Earliest queued HP request arrival (inf when none). The mirror
-        heap lets the fast path gate BE launches on pending arrivals
+        list lets the fast path gate BE launches on pending arrivals
         without scanning the main event heap."""
-        return self._arr_heap[0] if self._arr_heap else math.inf
+        i = self._arr_i
+        return self._arr_times[i] if i < len(self._arr_times) else math.inf
 
     def device_busy(self) -> bool:
         return self.inflight is not None
@@ -349,7 +354,7 @@ class SimExecutor:
         while self.events:
             t, _, kind, payload = heapq.heappop(self.events)
             if kind == ARRIVAL:
-                heapq.heappop(self._arr_heap)
+                self._arr_i += 1
             if t > self.duration and kind == ARRIVAL:
                 continue
             self.clock = max(self.clock, t)
@@ -472,6 +477,11 @@ class _FastForward:
         # whole requests at the head of a materialized client queue (False
         # = ambiguous head, never batch)
         self._req_head: Dict[int, Any] = {}
+        # id(last kernel) -> same, for mid-request queue heads (a request
+        # partially drained at an advance boundary resumes by its tail)
+        self._req_tail: Dict[int, Any] = {}
+        self._norun_rid = -2          # request known unrecognizable: the
+        #                               per-kernel path skips re-scanning it
         self._cfgs: Dict[int, LaunchConfig] = {}   # id(kernel) -> config
         self._price: Dict[Tuple, Tuple[float, int]] = {}  # launch pricing
         self._tput: Dict[int, Tuple[Any, float]] = {}     # id(client) -> acc
@@ -479,6 +489,9 @@ class _FastForward:
         self._backlog: Deque[Tuple[int, List[SimKernel]]] = deque()
         self._timers: List[float] = []             # pending gap wake-ups
         self._tmin = math.inf
+        # deferred hp_busy_time increments (duration arrays / scalars, in
+        # launch order) folded in one accumulate at _flush
+        self._busy_pend: List[Any] = []
 
     # -- memoized pricing ------------------------------------------------------
 
@@ -510,6 +523,12 @@ class _FastForward:
                 self._req_head[head] = (kernels, arr)
             elif prior is not False and prior[0] is not kernels:
                 self._req_head[head] = False
+            tail = id(kernels[-1])
+            prior = self._req_tail.get(tail)
+            if prior is None:
+                self._req_tail[tail] = (kernels, arr)
+            elif prior is not False and prior[0] is not kernels:
+                self._req_tail[tail] = False
         return arr
 
     def _config(self, k: SimKernel) -> LaunchConfig:
@@ -552,8 +571,16 @@ class _FastForward:
         fleet layer between advances) sees exactly what a slow run would:
         backlog payloads become queued ``PendingKernel``s, pending gap
         timers become heap TIMER events (in creation order, preserving
-        tie-break behaviour)."""
+        tie-break behaviour), and deferred HP busy-time increments fold
+        into ``hp_busy_time`` in one accumulate (same float64 additions
+        in the same order as the reference's per-launch ``+= dur``, so
+        the deferral is bit-invisible)."""
         ex = self.ex
+        if self._busy_pend:
+            pend = self._busy_pend
+            self._busy_pend = []
+            seq = pend[0] if len(pend) == 1 else np.concatenate(pend)
+            ex.hp_busy_time = float(_fold(ex.hp_busy_time, seq)[-1])
         if self._backlog:
             hp = ex.hp_client
             q = hp.queue
@@ -625,7 +652,8 @@ class _FastForward:
                         return             # horizon-crossing launch
                     continue
                 if backlog:
-                    if not self._hp_backlog_step(until):
+                    if not (self._hp_backlog_bulk(until) if ex.rec is None
+                            else self._hp_backlog_step(until)):
                         return             # horizon-crossing request
                     continue
             r = self._be_step(bes, until)
@@ -639,8 +667,11 @@ class _FastForward:
     # -- HP: whole-request retirement + per-kernel drain -----------------------
 
     def _hp_backlog_step(self, until: float) -> bool:
-        """Retire the oldest backlogged request in closed form. False when
-        it would cross ``until`` (flush + reference path take over)."""
+        """Retire the oldest backlogged request in closed form. When it
+        crosses ``until`` the prefix completing strictly before ``until``
+        retires in bulk and only the un-run tail is materialized into the
+        client queue (the reference path owns the crossing launch). False
+        when no kernel completes before ``until``."""
         ex = self.ex
         rid, kernels = self._backlog[0]
         if not kernels:
@@ -649,8 +680,17 @@ class _FastForward:
         durs = self._request_durs(kernels)
         folds = _fold(ex.clock, durs)
         end = float(folds[-1])
-        if end >= until:
-            return False
+        n = len(kernels)
+        if end < until:
+            cnt = n
+        else:
+            # completions at exactly ``until`` stay with the reference
+            # loop (it launches the crossing kernel), matching the
+            # per-kernel drain's `end >= until` bail
+            cnt = int(np.searchsorted(folds[1:], until, side="left"))
+            if cnt == 0:
+                return False
+            end = float(folds[cnt])
         self._backlog.popleft()
         events = ex.events
         rec = ex.rec
@@ -664,25 +704,161 @@ class _FastForward:
             # absorbed set and all state transitions are identical to the
             # bulk loop above, only the interleaving is made explicit
             hp = ex.hp_client
-            n = len(kernels)
-            for i, k in enumerate(kernels):
+            for i in range(cnt):
                 ke = float(folds[i + 1])
-                rec.hp_launch(float(folds[i]), hp, k, ke, rid)
+                rec.hp_launch(float(folds[i]), hp, kernels[i], ke, rid)
                 while events and events[0][0] <= ke:
                     self._absorb_in_flight()
-                rec.hp_complete(ke, hp, k, rid,
+                rec.hp_complete(ke, hp, kernels[i], rid,
                                 i == n - 1 and not self._backlog)
+        if cnt < n:
+            # the queue is empty here (_forward drains it before touching
+            # the backlog), so the tail lands at the head, ahead of any
+            # requests _flush materializes behind it
+            q = ex.hp_client.queue
+            for i in range(cnt, n):
+                q.append(PendingKernel(kernels[i], request_id=rid,
+                                       last_of_request=(i == n - 1)))
         if self._tmin <= end:
             self._drop_timers(end)
-        ex.hp_busy_time = float(_fold(ex.hp_busy_time, durs)[-1])
+        self._busy_pend.append(durs if cnt == n else durs[:cnt])
         ex.clock = end
-        ex.book.request_done(rid, end, ex.samples_per_request)
+        if cnt == n:
+            ex.book.request_done(rid, end, ex.samples_per_request)
         return True
 
+    def _hp_backlog_bulk(self, until: float) -> bool:
+        """Retire the *entire* backlog in one fold (non-recorded runs).
+
+        Every backlogged request has already arrived — it was absorbed
+        while an earlier kernel was in flight, or ``_absorb_next`` set
+        the clock to its arrival — so the batch runs back-to-back with
+        no idle gaps and a single accumulate over the concatenated
+        durations reproduces the reference's per-kernel ``clock += dur``
+        bit for bit; per-request completion clocks are read off the fold
+        at request boundaries. A request crossing ``until`` retires its
+        prefix and materializes only its un-run tail (the reference path
+        owns the crossing launch); later requests stay backlogged.
+        Recorded runs keep ``_hp_backlog_step`` — the trace needs the
+        per-kernel event interleaving made explicit. False when no
+        kernel completes before ``until``."""
+        ex = self.ex
+        backlog = self._backlog
+        while backlog and not backlog[0][1]:
+            backlog.popleft()              # empty request: arrival was the
+        if not backlog:                    # only observable effect
+            return True
+        groups: List[Tuple[int, List[SimKernel], np.ndarray]] = []
+        for rid, kernels in backlog:
+            if not kernels:
+                break                      # re-enter for trailing empties
+            groups.append((rid, kernels, self._request_durs(kernels)))
+        seq = (groups[0][2] if len(groups) == 1
+               else np.concatenate([g[2] for g in groups]))
+        folds = _fold(ex.clock, seq)
+        total = len(seq)
+        if float(folds[-1]) < until:
+            cnt = total
+        else:
+            # completions at exactly ``until`` stay with the reference
+            # loop, matching _hp_backlog_step's bail
+            cnt = int(np.searchsorted(folds[1:], until, side="left"))
+            if cnt == 0:
+                return False
+        end = float(folds[cnt])
+        events = ex.events
+        while events and events[0][0] <= end:
+            self._absorb_in_flight()       # arrivals append BEHIND groups
+        if self._tmin <= end:
+            self._drop_timers(end)
+        book = ex.book
+        spr = ex.samples_per_request
+        off = 0
+        done = 0
+        for rid, kernels, durs in groups:
+            nxt = off + len(durs)
+            if nxt > cnt:
+                break
+            # folds[1..cnt] are all < until, so folds[nxt] < until here
+            book.request_done(rid, float(folds[nxt]), spr)
+            done += 1
+            off = nxt
+        for _ in range(done):
+            backlog.popleft()
+        if done < len(groups) and cnt > off:
+            # crossing request: bulk-retire its prefix, queue its tail
+            # (queue is empty here — _forward drains it before the
+            # backlog — so the tail lands ahead of anything _flush
+            # materializes behind it)
+            rid, kernels, durs = groups[done]
+            backlog.popleft()
+            n = len(kernels)
+            q = ex.hp_client.queue
+            for i in range(cnt - off, n):
+                q.append(PendingKernel(kernels[i], request_id=rid,
+                                       last_of_request=(i == n - 1)))
+        self._busy_pend.append(seq if cnt == total else seq[:cnt])
+        ex.clock = end
+        return True
+
+    def _head_run(self, q) -> Optional[Tuple[List, np.ndarray, int]]:
+        """Identify the head of ``q`` as a contiguous run of one request:
+        ``(kernels, durs, start)`` where the queue begins with
+        ``kernels[start:]`` of a registered request plan. Requests are
+        appended atomically, so for a full request (``start == 0``)
+        rid-match at positions 0 and n-1 plus the last-of-request flag
+        proves contiguity; a mid-request head (left by an advance-boundary
+        crossing or a reference step) is located by its tail kernel and
+        verified kernel-by-kernel. ``None`` when unrecognized."""
+        pk = q[0]
+        plan = self._req_head.get(id(pk.kernel))
+        if plan is not None and plan is not False:
+            kernels, durs = plan
+            n = len(kernels)
+            if len(q) >= n:
+                tail = q[n - 1]
+                if (tail.last_of_request
+                        and tail.request_id == pk.request_id
+                        and tail.kernel is kernels[-1]):
+                    return kernels, durs, 0
+        rid = pk.request_id
+        run = []
+        for p in q:
+            if p.request_id != rid:
+                return None
+            run.append(p)
+            if p.last_of_request:
+                break
+        else:
+            return None
+        plan = self._req_tail.get(id(run[-1].kernel))
+        if plan is None:
+            # plans register on first backlog retirement; a request that
+            # reached the queue without one (arrival while idle) registers
+            # here via the workload's own kernel list
+            hp = self.ex.hp_client
+            if hp is not None:
+                ks = hp.workload.iteration(rid)
+                if ks and ks[-1] is run[-1].kernel:
+                    self._request_durs(ks)
+                    plan = self._req_tail.get(id(run[-1].kernel))
+        if plan is None or plan is False:
+            return None
+        kernels, durs = plan
+        start = len(kernels) - len(run)
+        if start < 0:
+            return None
+        for j, p in enumerate(run):
+            if p.kernel is not kernels[start + j]:
+                return None
+        return kernels, durs, start
+
     def _hp_drain(self, until: float) -> bool:
-        """Retire materialized HP kernels one ``+= dur`` at a time (no
-        heap, no scheduler pass). False when the next launch would cross
-        ``until`` — the reference loop owns horizon/strict semantics."""
+        """Retire materialized HP kernels: recognized request runs in bulk
+        (one cumsum, including the prefix of a run that crosses ``until``),
+        anything else one ``+= dur`` at a time (no heap, no scheduler
+        pass). False when the next launch would cross ``until`` — the
+        reference loop owns horizon/strict semantics."""
         ex = self.ex
         hp = ex.hp_client
         q = hp.queue
@@ -691,61 +867,60 @@ class _FastForward:
         spr = ex.samples_per_request
         rec = ex.rec
         clock = ex.clock
-        busy = ex.hp_busy_time
         while q:
             if clock >= until:
                 break
             pk = q[0]
-            # whole-request batching: when the head of the queue is the
-            # first kernel of a known request plan and the full request
-            # (same rid contiguous through its last kernel) completes
-            # inside the window, retire it with one cumsum. Requests are
-            # appended atomically, so rid-match at positions 0 and n-1
-            # plus the last-of-request flag proves contiguity.
-            plan = self._req_head.get(id(pk.kernel))
-            if plan is not None and plan is not False:
-                kernels, durs = plan
-                n = len(kernels)
-                if len(q) >= n:
-                    tail = q[n - 1]
-                    if (tail.last_of_request
-                            and tail.request_id == pk.request_id
-                            and tail.kernel is kernels[-1]):
-                        folds = _fold(clock, durs)
-                        end = float(folds[-1])
-                        if end < until:
-                            if rec is None:
-                                while events and events[0][0] <= end:
-                                    self._absorb_in_flight()
-                            else:
-                                # reference record order (see
-                                # ``_hp_backlog_step``); absorbed arrivals
-                                # land in the backlog, so ``q`` stays at
-                                # its pre-batch length throughout
-                                rid = tail.request_id
-                                for i in range(n):
-                                    ke = float(folds[i + 1])
-                                    rec.hp_launch(float(folds[i]), hp,
-                                                  kernels[i], ke, rid)
-                                    while events and events[0][0] <= ke:
-                                        self._absorb_in_flight()
-                                    rec.hp_complete(
-                                        ke, hp, kernels[i], rid,
-                                        i == n - 1 and len(q) == n
-                                        and not self._backlog)
-                            if self._tmin <= end:
-                                self._drop_timers(end)
-                            for _ in range(n):
-                                q.popleft()
-                            clock = end
-                            busy = float(_fold(busy, durs)[-1])
-                            book.request_done(tail.request_id, clock, spr)
-                            continue
+            run = (None if pk.request_id == self._norun_rid
+                   else self._head_run(q))
+            if run is None:
+                self._norun_rid = pk.request_id
+            else:
+                kernels, durs, start = run
+                n_run = len(durs) - start
+                folds = _fold(clock, durs[start:])
+                if float(folds[-1]) < until:
+                    cnt = n_run
+                else:
+                    # retire the prefix completing strictly before
+                    # ``until``; the crossing kernel stays queued for the
+                    # reference loop (`end >= until` bail below)
+                    cnt = int(np.searchsorted(folds[1:], until,
+                                              side="left"))
+                if cnt:
+                    rid = pk.request_id
+                    end = float(folds[cnt])
+                    if rec is None:
+                        while events and events[0][0] <= end:
+                            self._absorb_in_flight()
+                    else:
+                        # reference record order (see
+                        # ``_hp_backlog_step``); absorbed arrivals
+                        # land in the backlog, so ``q`` stays at
+                        # its pre-batch length throughout
+                        lenq = len(q)
+                        for i in range(cnt):
+                            ke = float(folds[i + 1])
+                            rec.hp_launch(float(folds[i]), hp,
+                                          kernels[start + i], ke, rid)
+                            while events and events[0][0] <= ke:
+                                self._absorb_in_flight()
+                            rec.hp_complete(
+                                ke, hp, kernels[start + i], rid,
+                                i + 1 == lenq and not self._backlog)
+                    if self._tmin <= end:
+                        self._drop_timers(end)
+                    for _ in range(cnt):
+                        q.popleft()
+                    clock = end
+                    self._busy_pend.append(durs[start:start + cnt])
+                    if cnt == n_run:
+                        book.request_done(rid, clock, spr)
+                    continue
             dur = self._duration(pk.kernel)
             end = clock + dur
             if end >= until:
                 ex.clock = clock
-                ex.hp_busy_time = busy
                 return False
             if rec is not None:
                 rec.hp_launch(clock, hp, pk.kernel, end, pk.request_id)
@@ -755,14 +930,13 @@ class _FastForward:
                 self._drop_timers(end)
             q.popleft()
             clock = end
-            busy = busy + dur
+            self._busy_pend.append(np.asarray([dur]))
             if rec is not None:
                 rec.hp_complete(end, hp, pk.kernel, pk.request_id,
                                 not q and not self._backlog)
             if pk.last_of_request:
                 book.request_done(pk.request_id, clock, spr)
         ex.clock = clock
-        ex.hp_busy_time = busy
         return True
 
     # -- BE: one launch per step, retired inline -------------------------------
@@ -902,7 +1076,7 @@ class _FastForward:
         ex = self.ex
         t, _, kind, payload = heapq.heappop(ex.events)
         if kind == ARRIVAL:
-            heapq.heappop(ex._arr_heap)
+            ex._arr_i += 1
             if t > ex.duration:
                 return
             ex.book.arrival(payload[0], t)
@@ -925,7 +1099,7 @@ class _FastForward:
                     return False
                 t, _, kind, payload = heapq.heappop(events)
                 if kind == ARRIVAL:
-                    heapq.heappop(ex._arr_heap)
+                    ex._arr_i += 1
                     if t > ex.duration:
                         continue           # silent skip, no clock motion
                     ex.clock = max(ex.clock, t)
@@ -954,7 +1128,7 @@ def _fold(start: float, durs: np.ndarray) -> np.ndarray:
     out = np.empty(len(durs) + 1)
     out[0] = start
     out[1:] = durs
-    return np.cumsum(out, out=out)
+    return np.add.accumulate(out, out=out)   # = cumsum, minus dispatch
 
 
 class DeviceEngine:
@@ -1014,11 +1188,27 @@ class DeviceEngine:
             self.rec.rec.register_job(client.job_id, workload)
         self.ex.set_hp_client(client, workload.samples_per_iteration)
         if trace is not None:
-            for rid, t in enumerate(trace.arrivals):
-                ta = float(t) + offset
-                if ta >= self.duration:
-                    break
-                self.ex.add_request(ta, rid, workload.iteration(rid))
+            # bulk insert: append all arrivals, then restore the heap
+            # invariant once (O(n) instead of n heap pushes). Pop order is
+            # fixed by the (t, seq) total order, not heap layout, so this
+            # is indistinguishable from per-arrival pushes.
+            ex = self.ex
+            ts = trace.arrivals + offset if offset else trace.arrivals
+            m = int(np.searchsorted(ts, self.duration, side="left"))
+            if m:
+                events = ex.events
+                seq = ex._seq
+                iteration = workload.iteration
+                events.extend(
+                    (float(ts[rid]), next(seq), ARRIVAL,
+                     (rid, iteration(rid)))
+                    for rid in range(m))
+                heapq.heapify(events)
+                arr = ex._arr_times
+                del arr[:ex._arr_i]
+                ex._arr_i = 0
+                arr.extend(ts[:m].tolist())
+                arr.sort()
         self.sched.add_client(client)
         return client
 
@@ -1090,6 +1280,27 @@ class DeviceEngine:
             if not c.is_high_priority and c.workload.kind == "train":
                 return False                 # training refills endlessly
         return True
+
+    def next_activity(self) -> float:
+        """Earliest time at which advancing this device could do anything
+        beyond moving the clock. ``clock`` when something is runnable right
+        now (an in-flight launch, a queued or refillable client), the
+        earliest queued event otherwise, ``inf`` when quiescent. The fleet's
+        event-driven core keys its fleet-wide priority queue on this:
+        ``advance(t)`` with ``next_activity() > t`` is exactly
+        ``clock = max(clock, t)`` in both engines, so skipping the call is
+        invisible (same contract as the ``_quiescent`` O(1) skip, widened
+        from "never again" to "not before the next queued event")."""
+        ex = self.ex
+        if ex.inflight is not None:
+            return ex.clock
+        for c in self.sched.clients:
+            if c.queue or c.kernel_running or c.current is not None:
+                return ex.clock
+            if not c.is_high_priority and c.workload.kind == "train":
+                return ex.clock              # training refills endlessly
+        ne = ex.next_event_time()
+        return math.inf if ne is None else ne
 
     def finalize(self) -> Bookkeeper:
         self.book.meta = {"profiled_kernels": self.profiler.profiled_kernels,

@@ -71,6 +71,17 @@ def maf2_like_trace(duration: float = 600.0, mean_rate: float = 50.0,
     return TrafficTrace(arr, duration)
 
 
+def poisson_trace(rate: float, duration: float,
+                  seed: int = 0) -> TrafficTrace:
+    """Homogeneous Poisson arrivals at ``rate`` req/s over ``duration``
+    (the memoryless baseline of the cluster workload generator; see
+    ``workloads.diurnal_arrivals`` for the time-varying version)."""
+    rng = np.random.default_rng(seed)
+    n = rng.poisson(rate * duration)
+    arr = np.sort(rng.uniform(0.0, duration, size=n))
+    return TrafficTrace(arr, duration)
+
+
 def scale_to_load(trace: TrafficTrace, service_latency: float,
                   load: float) -> TrafficTrace:
     """Rescale so that `load = mean_rate * service_latency` (paper's 'load'

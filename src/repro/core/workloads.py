@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import zlib
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -299,3 +299,130 @@ def arch_inference_workload(cfg, batch: int, seq: int, priority: int = 0
 
     return Workload(name=f"{cfg.name}-infer", kind="infer", priority=priority,
                     iteration=iteration, samples_per_iteration=batch)
+
+
+# ---------------------------------------------------------------------------
+# Cluster workload generation (Philly-style multi-tenant arrival processes)
+# ---------------------------------------------------------------------------
+
+
+def diurnal_arrivals(duration: float, mean_rate: float, *,
+                     amplitude: float = 0.5, period: float = 86400.0,
+                     phase: float = 0.0, seed: int = 0) -> np.ndarray:
+    """Job submission times from an inhomogeneous Poisson process with a
+    sinusoidal (diurnal) rate: lambda(t) = mean_rate * (1 + A sin(...)).
+    Sampled by thinning against the peak rate, so the returned times are
+    exact draws from the target process (Jeon et al., 1901.05758 report
+    exactly this day/night submission cycle in the Philly traces)."""
+    if not 0.0 <= amplitude < 1.0:
+        raise ValueError("amplitude must be in [0, 1)")
+    rng = np.random.default_rng(seed)
+    peak = mean_rate * (1.0 + amplitude)
+    n = rng.poisson(peak * duration)
+    cand = np.sort(rng.uniform(0.0, duration, size=n))
+    lam = mean_rate * (1.0 + amplitude
+                       * np.sin(2.0 * np.pi * cand / period + phase))
+    keep = rng.uniform(0.0, peak, size=n) < lam
+    return cand[keep]
+
+
+@dataclass
+class ClusterWorkload:
+    """One generated multi-tenant cluster scenario: the job list to submit
+    to a ``FleetSimulator`` plus the node-failure schedule to pass as its
+    ``failures=``. ``gangs`` maps a gang id to its member job names (gang
+    members share one submission instant; the fleet admits them as a
+    co-arriving batch)."""
+
+    jobs: List            # List[fleet.JobSpec]
+    failures: List        # List[fleet.DeviceFailure]
+    gangs: Dict[int, List[str]] = field(default_factory=dict)
+
+
+def cluster_workload(n_devices: int, *, duration: float = 60.0,
+                     jobs_per_device: float = 1.5, hp_fraction: float = 0.5,
+                     hp_load: float = 0.5,
+                     hp_names: Tuple[str, ...] = ("llama2-7b-infer",
+                                                  "stable-diffusion-infer",
+                                                  "gpt-neo-infer"),
+                     be_names: Tuple[str, ...] = ("gpt2-train",
+                                                  "whisper-train",
+                                                  "bert-train"),
+                     gang_fraction: float = 0.15, max_gang: int = 4,
+                     diurnal_amplitude: float = 0.5,
+                     diurnal_period: Optional[float] = None,
+                     be_duration_frac: float = 0.5,
+                     failure_rate: float = 0.0, dev: DeviceModel = A100,
+                     resident_fraction: float = 1 / 3,
+                     trace_pool: int = 8,
+                     seed: int = 0) -> ClusterWorkload:
+    """Generate a Philly-style multi-tenant cluster scenario.
+
+    Submissions follow a diurnal Poisson process (``diurnal_arrivals``)
+    sized to ``jobs_per_device * n_devices`` jobs over ``duration``
+    (``resident_fraction`` of them arrive at t=0 — the cluster is never
+    empty in the Philly traces); each submission is an HP inference
+    service with probability ``hp_fraction``, else a best-effort training
+    job. Same-model jobs share one ``Workload`` object and services draw
+    their traffic seed from a pool of ``trace_pool`` values — the paper
+    itself replays a single MAF2 function trace for every service, and
+    sharing lets the fleet reuse isolated baselines across services. A
+    ``gang_fraction`` share of BE submissions expands into a gang of
+    2..``max_gang`` members sharing one arrival instant. Node failures
+    are a homogeneous Poisson process at ``failure_rate`` per device per
+    second. Everything derives from ``seed`` — same arguments, same
+    scenario, bit for bit."""
+    from repro.core.fleet import DeviceFailure, be_job, hp_service
+
+    rng = np.random.default_rng(seed)
+    period = diurnal_period if diurnal_period is not None else duration
+    n_jobs = max(1, int(round(jobs_per_device * n_devices)))
+    n_resident = max(1, int(round(resident_fraction * n_jobs)))
+    n_resident = min(n_resident, n_jobs)
+    pool: Dict[Tuple[str, int], Workload] = {}
+
+    def _wl(name: str, priority: int) -> Workload:
+        w = pool.get((name, priority))
+        if w is None:
+            w = pool[(name, priority)] = paper_workload(name, priority)
+        return w
+    times = diurnal_arrivals(duration, (n_jobs - n_resident) / duration,
+                             amplitude=diurnal_amplitude, period=period,
+                             seed=seed + 1)
+    arrivals = np.concatenate([np.zeros(n_resident), times])
+    jobs: List = []
+    failures: List = []
+    gangs: Dict[int, List[str]] = {}
+    gang_id = 0
+    i = 0
+    for t in arrivals:
+        t = float(t)
+        if rng.uniform() < hp_fraction:
+            name = hp_names[int(rng.integers(len(hp_names)))]
+            jobs.append(hp_service(
+                f"svc-{i}", _wl(name, 0), arrival=t,
+                load=hp_load, seed=int(rng.integers(trace_pool))))
+            i += 1
+            continue
+        size = 1
+        if rng.uniform() < gang_fraction and max_gang > 1:
+            size = int(rng.integers(2, max_gang + 1))
+        members = []
+        be_dur = (float(rng.uniform(0.25, 1.0)) * be_duration_frac
+                  * duration if be_duration_frac > 0 else None)
+        for _ in range(size):
+            name = be_names[int(rng.integers(len(be_names)))]
+            jobs.append(be_job(f"train-{i}", _wl(name, 1),
+                               arrival=t, duration=be_dur))
+            members.append(f"train-{i}")
+            i += 1
+        if size > 1:
+            gangs[gang_id] = members
+            gang_id += 1
+    if failure_rate > 0.0:
+        frng = np.random.default_rng(seed + 2)
+        for d in range(n_devices):
+            n_f = frng.poisson(failure_rate * duration)
+            for t in np.sort(frng.uniform(0.0, duration, size=n_f)):
+                failures.append(DeviceFailure(time=float(t), device=d))
+    return ClusterWorkload(jobs=jobs, failures=failures, gangs=gangs)

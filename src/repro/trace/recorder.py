@@ -21,6 +21,8 @@ from __future__ import annotations
 
 from typing import Any, Dict, List, Optional
 
+import numpy as np
+
 from repro.trace.schema import (ARRIVAL, BE_COMPLETE, BE_LAUNCH, CANCEL,
                                 GATE_CLOSE, GATE_OPEN, HP_COMPLETE,
                                 HP_LAUNCH, MIGRATE, PREEMPT, JobDef,
@@ -110,12 +112,29 @@ class TraceRecorder:
 
     def finish(self) -> Trace:
         """Build the immutable columnar ``Trace`` (recorder stays usable —
-        a later ``finish`` sees any further events)."""
+        a later ``finish`` sees any further events).
+
+        Rows are canonicalized to (ts, device, append order). Per-device
+        streams are appended in nondecreasing ts, so this is the identity
+        for single-device traces; for fleets it makes the trace
+        independent of the *interleaving* of device advances — the
+        event-driven core syncs devices in big strides while the lockstep
+        core round-robins them per decision point, yet both must finish
+        to bit-identical traces."""
+        cols = {"ts": self._ts, "kind": self._kind, "device": self._device,
+                "job": self._job, "kernel": self._kernel,
+                "value": self._value, "aux": self._aux}
+        n = len(self._ts)
+        if n:
+            ts = np.asarray(self._ts, dtype=np.float64)
+            dev = np.asarray(self._device, dtype=np.int64)
+            idx = np.arange(n)
+            perm = np.lexsort((idx, dev, ts))
+            if not np.array_equal(perm, idx):
+                cols = {name: np.asarray(col)[perm]
+                        for name, col in cols.items()}
         return Trace.from_columns(
-            {"ts": self._ts, "kind": self._kind, "device": self._device,
-             "job": self._job, "kernel": self._kernel, "value": self._value,
-             "aux": self._aux},
-            list(self._kernels), list(self._jobs), dict(self.meta))
+            cols, list(self._kernels), list(self._jobs), dict(self.meta))
 
 
 class DeviceRecorder:

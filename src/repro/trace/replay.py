@@ -86,7 +86,7 @@ def replay_fleet(trace: Trace, *, fast: Optional[bool] = None,
     reconstructed from the trace; with the recorded engine settings the
     replayed fleet reproduces placements, migrations, and every kernel
     event bit for bit."""
-    from repro.core.fleet import FleetSimulator, JobSpec
+    from repro.core.fleet import DeviceFailure, FleetSimulator, JobSpec
 
     meta = trace.meta.get("fleet")
     if meta is None:
@@ -112,7 +112,10 @@ def replay_fleet(trace: Trace, *, fast: Optional[bool] = None,
         threshold=meta["threshold"],
         max_be_per_device=meta["max_be_per_device"],
         min_window=meta["min_window"],
-        fast=meta["fast"] if fast is None else fast, recorder=rec)
+        fast=meta["fast"] if fast is None else fast, recorder=rec,
+        event_driven=meta.get("event_driven", True),
+        failures=[DeviceFailure(t, int(di))
+                  for t, di in meta.get("failures", [])])
     result = fleet.run(jobs)
     return result, (rec.finish() if rec is not None else None)
 

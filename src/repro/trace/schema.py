@@ -17,9 +17,12 @@ co-execution lifecycle at kernel granularity:
                   (migration detach)
     migrate       BE job moved between devices   value=destination device
 
-Column order is append order, which the recorder keeps identical between
-the fast and reference engines (the bit-exactness contract extends to
-traces: same events, same clocks, same order). Timestamps are exact
+Column order is canonical (ts, then device, append order breaking ties):
+per-device streams append in nondecreasing ts and the recorder sorts at
+``finish``, so the order is independent of how a fleet run interleaved
+its device advances. The bit-exactness contract extends to traces: the
+fast and reference engines — and the event-driven and lockstep fleet
+cores — finish to the same events, clocks, and order. Timestamps are exact
 float64 simulator clocks — JSON serialization uses Python's repr-exact
 float encoding and NPZ stores the arrays verbatim, so
 ``Trace.from_json_dict(t.to_json_dict())`` is bit-identical.

@@ -1,0 +1,229 @@
+"""Event-driven fleet core: bit-exact equivalence vs the lockstep core.
+
+The fleet's event-driven core (``FleetSimulator(event_driven=True)``, the
+default) must reproduce the lockstep reference core bit for bit — same
+placements, migrations, departures, reports, and (when recording) the
+same trace, event for event — the same way ``tests/test_fast_path.py``
+pins the single-device fast path to the reference engine. Also covers
+the edge cases the fleet-wide event queue introduces: zero-device
+fleets, all-quiescent advances, simultaneous next-event ties, and
+admission landing exactly on a device's next-event time.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.device_model import A100
+from repro.core.fleet import (DeviceFailure, FleetSimulator, be_job,
+                              hp_service)
+from repro.core.traffic import TrafficTrace, poisson_trace
+from repro.core.workloads import paper_workload
+from repro.trace.recorder import TraceRecorder
+
+
+def _fingerprint(res):
+    """Every observable of a fleet run, for exact comparison."""
+    return {
+        "placements": res.placements,
+        "migrations": [(m.time, m.job, m.src, m.dst)
+                       for m in res.migrations],
+        "unplaced": res.unplaced,
+        "services": {
+            n: (s.device, s.placed_at, s.requests_done, s.p99, s.ideal_p99,
+                s.slo_attainment, s.norm_goodput, s.active_span)
+            for n, s in res.services.items()},
+        "be_jobs": {
+            n: (b.device, b.placed_at, b.samples, b.rate, b.norm_tput,
+                b.migrations, b.active_span)
+            for n, b in res.be_jobs.items()},
+    }
+
+
+def _assert_same(fp_a, fp_b):
+    assert fp_a["placements"] == fp_b["placements"]
+    assert fp_a["migrations"] == fp_b["migrations"]
+    assert fp_a["unplaced"] == fp_b["unplaced"]
+    assert set(fp_a["services"]) == set(fp_b["services"])
+    for n in fp_a["services"]:
+        a, b = fp_a["services"][n], fp_b["services"][n]
+        assert a == b or all(
+            x == y or (isinstance(x, float) and math.isnan(x)
+                       and math.isnan(y)) for x, y in zip(a, b)), \
+            f"service {n}: {a} != {b}"
+    assert fp_a["be_jobs"] == fp_b["be_jobs"]
+
+
+def _run_both(jobs, *, record=False, **kw):
+    fps, traces = [], []
+    for event_driven in (True, False):
+        rec = TraceRecorder() if record else None
+        fleet = FleetSimulator(event_driven=event_driven, recorder=rec, **kw)
+        res = fleet.run([j for j in jobs])
+        fps.append(_fingerprint(res))
+        traces.append(rec.finish() if rec is not None else None)
+    _assert_same(fps[0], fps[1])
+    if record:
+        # bit-exact including the recorded trace: same events, same
+        # clocks, same append order (meta differs only in the
+        # event_driven flag itself)
+        traces[0].assert_equal(traces[1])
+    return fps[0]
+
+
+# ---------------------------------------------------------------------------
+# Equivalence on representative fleet scenarios
+# ---------------------------------------------------------------------------
+
+
+def test_equivalence_migration_scenario_with_trace():
+    """The canonical SLO-violation fixture: a migration must happen and
+    both cores must record identical traces."""
+    hp = paper_workload("bert-infer", 0)
+    be = paper_workload("whisper-train", 1)
+    jobs = [hp_service("svc", hp, load=0.6, seed=2, slo_factor=1.02),
+            be_job("noisy", be)]
+    fp = _run_both(jobs, record=True, n_devices=2, policy="first_fit",
+                   horizon=16.0, check_interval=2.0, min_window=10)
+    assert fp["migrations"], "scenario must exercise a BE migration"
+
+
+def test_equivalence_mixed_arrivals_departures_and_queueing():
+    """Staggered arrivals, a bounded BE job (departure point), and an
+    over-subscribed fleet (jobs waiting in the admission queue)."""
+    hp1 = paper_workload("resnet50-infer", 0)
+    hp2 = paper_workload("bert-infer", 0)
+    be = paper_workload("gpt2-train", 1)
+    jobs = [
+        hp_service("a", hp1, load=0.3, seed=1),
+        hp_service("b", hp2, arrival=3.0, load=0.4, seed=2),
+        hp_service("c", hp1, arrival=4.5, load=0.2, seed=3),  # queued: 2 GPUs
+        be_job("t1", be, duration=4.0),
+        be_job("t2", be, arrival=1.0),
+        be_job("t3", be, arrival=6.0, duration=2.5),
+    ]
+    fp = _run_both(jobs, record=True, n_devices=2, policy="least_loaded",
+                   horizon=12.0, check_interval=2.0, max_be_per_device=2)
+    assert "c" in fp["unplaced"]
+
+
+def test_equivalence_interference_aware_policy():
+    hp = paper_workload("bert-infer", 0)
+    be = paper_workload("whisper-train", 1)
+    jobs = [hp_service("svc", hp, load=0.5, seed=4),
+            be_job("w1", be), be_job("w2", be, arrival=2.0)]
+    _run_both(jobs, n_devices=3, policy="interference_aware",
+              horizon=10.0, check_interval=2.0)
+
+
+def test_equivalence_device_failure_requeues_be():
+    """A node failure freezes the device, re-queues its BE jobs (progress
+    carried), and both cores agree bit for bit."""
+    hp = paper_workload("resnet50-infer", 0)
+    be = paper_workload("gpt2-train", 1)
+    jobs = [hp_service("svc", hp, load=0.3, seed=1),
+            be_job("t1", be), be_job("t2", be)]
+    fp = _run_both(jobs, record=True, n_devices=2, policy="first_fit",
+                   horizon=12.0, check_interval=2.0, max_be_per_device=2,
+                   failures=[DeviceFailure(time=6.0, device=0)])
+    # the failed device hosted the HP service (first-fit): its span ends
+    # at the failure, and its BE residents moved on
+    assert fp["services"]["svc"][7] == pytest.approx(6.0)   # active_span
+
+
+def test_failed_device_excluded_from_placement():
+    be = paper_workload("gpt2-train", 1)
+    fleet = FleetSimulator(2, "first_fit", horizon=10.0, check_interval=2.0,
+                           max_be_per_device=1,
+                           failures=[DeviceFailure(time=2.0, device=1)])
+    res = fleet.run([be_job("a", be),
+                     be_job("late", be, arrival=4.0)])
+    # device 1 failed before "late" arrived and device 0 is full
+    assert "late" in res.unplaced
+
+
+# ---------------------------------------------------------------------------
+# Event-queue edge cases
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("event_driven", [True, False])
+def test_zero_device_fleet(event_driven):
+    be = paper_workload("gpt2-train", 1)
+    fleet = FleetSimulator(0, "first_fit", horizon=5.0, check_interval=1.0,
+                           event_driven=event_driven)
+    res = fleet.run([be_job("j", be)])
+    assert res.unplaced == ["j"]
+    assert res.cluster_goodput == 0.0
+
+
+def test_all_devices_quiescent_advance():
+    """A fleet with nothing resident must advance straight to the horizon
+    (no device ever becomes due) and still align every clock there."""
+    fleet = FleetSimulator(4, "first_fit", horizon=8.0, check_interval=1.0)
+    res = fleet.run([])
+    assert res.cluster_goodput == 0.0
+    for d in fleet.devices:
+        assert d.engine.now() == pytest.approx(8.0)
+
+
+def test_simultaneous_next_event_ties_are_deterministic():
+    """Devices with identical next-event times (same workload, same
+    traffic, same seed) must advance in device-index order — rerunning
+    the identical scenario twice must be bit-identical, and equal to
+    lockstep."""
+    hp = paper_workload("bert-infer", 0)
+    arr = TrafficTrace(np.arange(0.0, 6.0, 0.5), 6.0)
+    jobs = [hp_service("s0", hp, trace=arr, seed=0),
+            hp_service("s1", hp, trace=arr, seed=0)]
+    fps = []
+    for _ in range(2):
+        rec = TraceRecorder()
+        fleet = FleetSimulator(2, "first_fit", horizon=6.0,
+                               check_interval=2.0, recorder=rec)
+        fps.append((_fingerprint(fleet.run([j for j in jobs])),
+                    rec.finish()))
+    _assert_same(fps[0][0], fps[1][0])
+    fps[0][1].assert_equal(fps[1][1])
+    _run_both(jobs, record=True, n_devices=2, policy="first_fit",
+              horizon=6.0, check_interval=2.0)
+
+
+def test_admission_at_exact_next_event_time():
+    """A job arriving exactly at another device's next-event time (an HP
+    request arrival at t=3.0) must admit at that instant in both cores."""
+    hp = paper_workload("resnet50-infer", 0)
+    be = paper_workload("gpt2-train", 1)
+    arr = TrafficTrace(np.arange(0.0, 10.0, 1.0), 10.0)
+    jobs = [hp_service("svc", hp, trace=arr),
+            be_job("t", be, arrival=3.0)]
+    fp = _run_both(jobs, record=True, n_devices=2, policy="first_fit",
+                   horizon=10.0, check_interval=2.0)
+    assert [t for t, n, _ in fp["placements"] if n == "t"] == [3.0]
+
+
+def test_next_activity_contract():
+    """advance(t) with next_activity() > t must be exactly clock = t (the
+    event core's license to skip the call)."""
+    from repro.core.simulator import DeviceEngine
+    hp = paper_workload("resnet50-infer", 0)
+    eng = DeviceEngine(A100, duration=20.0)
+    eng.attach_hp(hp, TrafficTrace(np.asarray([5.0]), 20.0))
+    na = eng.next_activity()
+    assert na == pytest.approx(5.0)
+    eng.advance(4.0, strict=True)       # before the arrival: clock only
+    assert eng.now() == 4.0 and eng.next_activity() == pytest.approx(5.0)
+    eng.advance(6.0, strict=True)
+    assert eng.book.latency.count >= 0  # arrival consumed
+    assert eng.next_activity() >= 5.0
+    # quiescent engines report inf
+    idle = DeviceEngine(A100, duration=20.0)
+    assert math.isinf(idle.next_activity())
+
+
+def test_poisson_trace_helper_exists():
+    """The cluster generator's arrival process is reusable on its own."""
+    tr = poisson_trace(rate=2.0, duration=30.0, seed=1)
+    assert isinstance(tr, TrafficTrace)
+    assert tr.duration == 30.0
+    assert (np.diff(tr.arrivals) >= 0).all()
