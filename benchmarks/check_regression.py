@@ -90,6 +90,29 @@ def trace_exact(d: dict) -> Dict[str, float]:
     return {"trace round-trip events": d["round_trip"]["events"]}
 
 
+def obs_overhead_failures(fresh: dict,
+                          max_overhead: float = 0.05) -> List[str]:
+    """Telemetry-layer gate (absolute, against the fresh run itself):
+    with a full ObsHub attached, simulated results must be bit-identical
+    and the wall-clock overhead must stay under ``max_overhead``."""
+    o = fresh.get("obs_overhead")
+    if o is None:
+        return ["obs_overhead tier missing from the fresh perf run"]
+    failures = []
+    if not o.get("identical_results"):
+        failures.append(
+            "telemetry perturbed simulated results — the obs layer must "
+            "be observation-only (bit-exact on)")
+    frac = o.get("overhead_frac", 0.0)
+    if frac > max_overhead:
+        failures.append(
+            f"telemetry overhead {frac * 100:.1f}% exceeds the "
+            f"{max_overhead * 100:.0f}% budget "
+            f"(bare {o['single_wall_s_bare'] + o['fleet_wall_s_bare']:.2f}s "
+            f"vs obs {o['single_wall_s_obs'] + o['fleet_wall_s_obs']:.2f}s)")
+    return failures
+
+
 # -- comparison ---------------------------------------------------------------
 
 
@@ -167,6 +190,13 @@ def main(argv=None) -> int:
         {**perf_exact(fresh_perf), **trace_exact(fresh_trace)},
         {**perf_exact(base_perf), **trace_exact(base_trace)},
         args.threshold)
+    obs_failures = obs_overhead_failures(fresh_perf)
+    failures += obs_failures
+    o = fresh_perf.get("obs_overhead") or {}
+    if not obs_failures:
+        lines.append(f"  OK   telemetry overhead: "
+                     f"{o.get('overhead_frac', 0.0) * 100:+.1f}% "
+                     f"(identical results, budget 5%)")
 
     print("\n== check_regression: fresh quick tiers vs committed ledger ==")
     print("\n".join(lines))

@@ -64,18 +64,18 @@ def run_scenario(n_gpus: int, mix: str, policy: str,
                            check_interval=horizon / 10, min_window=15,
                            fast=fast)
     res = fleet.run(build_jobs(mix, horizon))
-    p99s = [s.p99 for s in res.services.values() if np.isfinite(s.p99)]
-    slos = [s.slo_attainment for s in res.services.values()
-            if s.device is not None]
+    # row values come from the result's own summary() (single source of
+    # truth, shared with fig9 and FleetResult.to_json)
+    s = res.summary()
     return {
         "gpus": n_gpus, "mix": mix, "policy": policy,
-        "goodput": res.cluster_goodput,
-        "goodput_per_gpu": res.goodput_per_gpu,
-        "worst_p99_ms": max(p99s) * 1e3 if p99s else float("nan"),
-        "mean_slo_att": float(np.mean(slos)) if slos else 0.0,
-        "migrations": len(res.migrations),
-        "unplaced": len(res.unplaced),
-        "gpu_hours_saved": res.gpu_hours_saved,
+        "goodput": s["cluster_goodput"],
+        "goodput_per_gpu": s["goodput_per_gpu"],
+        "worst_p99_ms": s["worst_p99_ms"],
+        "mean_slo_att": s["mean_slo_attainment"],
+        "migrations": int(s["migrations"]),
+        "unplaced": int(s["unplaced_jobs"]),
+        "gpu_hours_saved": s["gpu_hours_saved"],
     }
 
 

@@ -70,9 +70,14 @@ def kernel_completions(result, workloads) -> float:
 
 
 def run_scale(n_devices: int, *, duration: float = 60.0,
-              seed: int = 0, **scenario) -> Dict[str, float]:
+              seed: int = 0, obs=None, result_out: list = None,
+              **scenario) -> Dict[str, float]:
     """One sweep point: generate the scenario, run the event-driven
-    fleet, report wall time + simulated-kernel throughput."""
+    fleet, report wall time + simulated-kernel throughput. ``obs`` takes
+    a ``repro.obs.ObsHub`` (telemetry is bit-exact, so the reported
+    numbers are unchanged — only the wall time pays the hook cost);
+    ``result_out`` receives the ``FleetResult`` when given (dashboard
+    rendering needs the full object, not just the row)."""
     from repro.core.fleet import FleetSimulator
     from repro.core.workloads import cluster_workload
 
@@ -80,11 +85,15 @@ def run_scale(n_devices: int, *, duration: float = 60.0,
                           **scenario)
     workloads = {j.name: j.workload for j in cw.jobs}
     fleet = FleetSimulator(n_devices, "first_fit", horizon=duration,
-                           check_interval=5.0, failures=cw.failures)
+                           check_interval=5.0, failures=cw.failures,
+                           obs=obs)
     t0 = time.perf_counter()
     result = fleet.run(cw.jobs)
     wall = time.perf_counter() - t0
     completions = kernel_completions(result, workloads)
+    if result_out is not None:
+        result_out.append(result)
+    s = result.summary()
     return {
         "n_devices": n_devices,
         "n_jobs": len(cw.jobs),
@@ -93,8 +102,10 @@ def run_scale(n_devices: int, *, duration: float = 60.0,
         "wall_s": wall,
         "kernel_completions": completions,
         "completions_per_s": completions / wall if wall > 0 else 0.0,
-        "cluster_goodput": result.cluster_goodput,
-        "unplaced": len(result.unplaced),
+        "cluster_goodput": s["cluster_goodput"],
+        "unplaced": int(s["unplaced_jobs"]),
+        "migrations": int(s["migrations"]),
+        "requests_done": int(s["requests_done"]),
     }
 
 
@@ -116,11 +127,32 @@ def main(argv=None) -> dict:
     ap.add_argument("--quick", action="store_true",
                     help="16/32-device points only (CI smoke)")
     ap.add_argument("--output", default=str(RESULTS / "fig9_cluster.json"))
+    ap.add_argument("--dashboard", default=None, metavar="PATH",
+                    help="re-run the largest sweep point with live "
+                         "telemetry and write a self-contained HTML "
+                         "dashboard (+ the full FleetResult as JSON "
+                         "next to it)")
     args = ap.parse_args(argv)
 
     sizes = QUICK_SIZES if args.quick else FULL_SIZES
     duration = QUICK_DURATION if args.quick else FULL_DURATION
     sweep = cluster_sweep(sizes, duration=duration)
+
+    if args.dashboard:
+        from repro.obs import ObsHub, render_dashboard
+
+        hub = ObsHub()
+        results: list = []
+        row = run_scale(sizes[-1], duration=duration, obs=hub,
+                        result_out=results, **SCENARIO)
+        render_dashboard(results[0], hub, path=args.dashboard,
+                         title=f"fig9 cluster sweep — "
+                               f"{sizes[-1]} devices, {duration:.0f}s")
+        json_path = args.dashboard.rsplit(".", 1)[0] + ".json"
+        results[0].to_json(json_path)
+        sweep["dashboard_point"] = row
+        print(f"wrote {args.dashboard} and {json_path} "
+              f"({len(hub.audit)} audit records)")
 
     print("== fig9: cluster-scale fleet sweep (event-driven core) ==")
     print(fmt_table(sweep["points"],

@@ -58,19 +58,23 @@ def scenario():
 
 def main(argv=None) -> int:
     from repro.core.fleet import FleetSimulator
+    from repro.obs import ObsHub, prometheus_text
     from repro.trace.recorder import TraceRecorder
 
-    fps, traces, walls = [], [], []
+    fps, traces, walls, hubs = [], [], [], []
     for event_driven in (True, False):
         rec = TraceRecorder()
+        hub = ObsHub()
         fleet = FleetSimulator(4, "first_fit", horizon=16.0,
                                check_interval=2.0, min_window=10,
-                               event_driven=event_driven, recorder=rec)
+                               event_driven=event_driven, recorder=rec,
+                               obs=hub)
         t0 = time.perf_counter()
         res = fleet.run(scenario())
         walls.append(time.perf_counter() - t0)
         fps.append(_fingerprint(res))
         traces.append(rec.finish())
+        hubs.append(hub)
 
     label = "event-driven vs lockstep"
     if fps[0] != fps[1]:
@@ -90,10 +94,30 @@ def main(argv=None) -> int:
               "longer covers the migration path; re-tune the scenario")
         return 1
 
+    # telemetry must match byte for byte across cores as well
+    if hubs[0].audit.fingerprint() != hubs[1].audit.fingerprint():
+        print(f"FAIL: audit logs differ ({label})")
+        return 1
+    if prometheus_text(hubs[0].registry) != prometheus_text(hubs[1].registry):
+        print(f"FAIL: metric registries differ ({label})")
+        return 1
+    # and the audit log must reconstruct every migration with the SLO
+    # inputs that triggered it (window p99 above the bound)
+    for t, job, src, dst in fps[0]["migrations"]:
+        recs = [r for r in hubs[0].audit.why(job, t) if r.kind == "migration"]
+        if len(recs) != 1 or recs[0].device != src \
+                or recs[0].details["dst"] != dst \
+                or not recs[0].details["window_p99"] > recs[0].details["bound"]:
+            print(f"FAIL: audit log cannot reconstruct migration of "
+                  f"{job!r} at t={t}")
+            return 1
+
     n_events = len(traces[0])
     print(f"OK: fleet cores bit-exact ({label}); "
           f"{n_events} trace events, {len(fps[0]['migrations'])} "
-          f"migration(s), walls {walls[0]:.2f}s / {walls[1]:.2f}s")
+          f"migration(s) all reconstructed from the audit log, "
+          f"{len(hubs[0].audit)} audit records, "
+          f"walls {walls[0]:.2f}s / {walls[1]:.2f}s")
     return 0
 
 

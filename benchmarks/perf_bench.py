@@ -99,6 +99,86 @@ def single_device(duration: float, skip_reference: bool) -> Dict[str, float]:
 
 
 # ---------------------------------------------------------------------------
+# Tier 4: telemetry overhead (obs layer on vs off)
+# ---------------------------------------------------------------------------
+
+
+def obs_overhead(duration: float, horizon: float,
+                 repeats: int = 3) -> Dict[str, object]:
+    """Cost of the live-telemetry layer: the tier-1 single-device run and
+    a small fleet scenario, bare vs with a full ``ObsHub`` attached
+    (registry + audit + self-profiler). Contract, enforced by
+    ``check_regression``: simulated outcomes are bit-identical with
+    telemetry on, and the wall-clock overhead stays under 5% (off is
+    exactly zero by construction — every hook sits behind an
+    ``obs is None`` guard)."""
+    from repro.core.fleet import FleetSimulator
+    from repro.obs import ObsHub
+    from benchmarks.fig8_fleet import build_jobs
+
+    hp = paper_workload("resnet50-infer", 0)
+    bes = [paper_workload("gpt2-train", 1)]
+    iso = isolated_time(hp, A100)
+    base = maf2_like_trace(duration=duration, mean_rate=0.5 / iso, seed=7)
+    trace = scale_to_load(base, iso, 0.5)
+
+    def single(with_obs: bool):
+        _cold_caches()
+        obs = ObsHub() if with_obs else None
+        t0 = time.perf_counter()
+        book = simulate("tally", hp, bes, trace, A100, duration=duration,
+                        fast=True, obs=obs)
+        wall = time.perf_counter() - t0
+        return wall, (tuple(book.latency.latencies),
+                      _count_events(book, hp, bes))
+
+    def fleet(with_obs: bool):
+        _cold_caches()
+        obs = ObsHub() if with_obs else None
+        jobs = build_jobs("balanced", horizon)
+        sim = FleetSimulator(2, "least_loaded", horizon=horizon,
+                             check_interval=horizon / 10, min_window=15,
+                             obs=obs)
+        t0 = time.perf_counter()
+        res = sim.run(jobs)
+        wall = time.perf_counter() - t0
+        # NaN-valued summary entries (e.g. p99 of a service with no
+        # requests yet) are canonicalized so fingerprints compare equal
+        fp = {k: ("nan" if isinstance(v, float) and v != v else v)
+              for k, v in res.summary().items()}
+        fp["migrations_detail"] = [(m.time, m.job, m.src, m.dst)
+                                   for m in res.migrations]
+        return wall, fp
+
+    def best_of(fn, with_obs: bool):
+        walls, fp = [], None
+        for _ in range(repeats):
+            w, f = fn(with_obs)
+            assert fp is None or fp == f, "non-deterministic benchmark run"
+            walls.append(w)
+            fp = f
+        return min(walls), fp
+
+    sw_bare, sfp_bare = best_of(single, False)
+    sw_obs, sfp_obs = best_of(single, True)
+    fw_bare, ffp_bare = best_of(fleet, False)
+    fw_obs, ffp_obs = best_of(fleet, True)
+    identical = (sfp_bare == sfp_obs) and (ffp_bare == ffp_obs)
+    bare, obs_w = sw_bare + fw_bare, sw_obs + fw_obs
+    return {
+        "duration_s": duration,
+        "fleet_horizon_s": horizon,
+        "repeats": repeats,
+        "single_wall_s_bare": sw_bare,
+        "single_wall_s_obs": sw_obs,
+        "fleet_wall_s_bare": fw_bare,
+        "fleet_wall_s_obs": fw_obs,
+        "overhead_frac": obs_w / bare - 1.0 if bare else 0.0,
+        "identical_results": identical,
+    }
+
+
+# ---------------------------------------------------------------------------
 # Tier 3: fig9 cluster-scale sweep (event-driven fleet core)
 # ---------------------------------------------------------------------------
 
@@ -175,22 +255,25 @@ def main(argv=None) -> dict:
         sweep = fig8_sweep((2,), ("balanced",),
                            ("first_fit", "least_loaded"),
                            horizon=8.0, skip_reference=args.skip_reference)
+        obs = obs_overhead(duration=8.0, horizon=8.0)
         tier = "quick"
     else:
         sd = single_device(duration=30.0, skip_reference=args.skip_reference)
         sweep = fig8_sweep((2, 4), tuple(MIXES), PLACEMENT_POLICIES,
                            horizon=24.0, skip_reference=args.skip_reference)
+        obs = obs_overhead(duration=30.0, horizon=24.0)
         tier = "full"
     cluster = fig9_cluster_tier(quick=args.quick)
 
     result = {
-        "schema": 2,
+        "schema": 3,
         "tier": tier,
         "python": platform.python_version(),
         "machine": platform.machine(),
         "single_device": sd,
         "fig8_sweep": sweep,
         "cluster_sweep": cluster,
+        "obs_overhead": obs,
         "bench_wall_s": time.time() - t0,
     }
     RESULTS.mkdir(parents=True, exist_ok=True)
@@ -211,9 +294,18 @@ def main(argv=None) -> dict:
             {"bench": f"cluster_sweep[{len(cluster['points'])}]",
              "wall_s_fast": sum(p["wall_s"] for p in cluster["points"]),
              "wall_s_reference": None, "speedup": None,
-             "events_per_s": cluster["peak_completions_per_s"]}]
+             "events_per_s": cluster["peak_completions_per_s"]},
+            {"bench": "obs_overhead",
+             "wall_s_fast": (obs["single_wall_s_obs"]
+                             + obs["fleet_wall_s_obs"]),
+             "wall_s_reference": (obs["single_wall_s_bare"]
+                                  + obs["fleet_wall_s_bare"]),
+             "speedup": None,
+             "events_per_s": None}]
     print(fmt_table(rows, ("bench", "wall_s_fast", "wall_s_reference",
                            "speedup", "events_per_s"), floatfmt="{:,.2f}"))
+    print(f"telemetry overhead: {obs['overhead_frac'] * 100:+.1f}% "
+          f"(identical results: {obs['identical_results']})")
     print(f"\nwrote {args.output}  ({result['bench_wall_s']:.0f}s)")
     return result
 

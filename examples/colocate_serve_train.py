@@ -12,16 +12,30 @@ sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
 import json
 
 from repro.launch.serve import serve
+from repro.obs import ObsHub, prometheus_text
 
 
 def main() -> None:
+    hub = ObsHub()        # live telemetry: per-request latency histograms
     out = serve("qwen2.5-14b", requests=12, capacity=4,
-                max_new_tokens=6, colocate_train=True)
+                max_new_tokens=6, colocate_train=True, obs=hub)
     print(json.dumps(out, indent=1))
     print(f"\nserved {out['requests']} requests "
           f"(p99 {out['p99_ms']:.0f} ms on CPU-interpret) while the "
           f"best-effort trainer completed {out['be_quanta']} quanta "
           f"in serving idle gaps")
+    lat = hub.registry.get("tally_serving_request_latency_seconds").child()
+    ttft = hub.registry.get("tally_serving_ttft_seconds").child()
+    print(f"registry view: {lat.count} requests, "
+          f"latency p50≈{lat.quantile(0.5) * 1e3:.0f} ms "
+          f"p99≈{lat.quantile(0.99) * 1e3:.0f} ms, "
+          f"ttft p99≈{ttft.quantile(0.99) * 1e3:.0f} ms "
+          f"(bucketed estimates)")
+    text = prometheus_text(hub.registry)
+    serving_lines = [ln for ln in text.splitlines()
+                     if ln.startswith("tally_serving")
+                     and ("_count" in ln or "_total" in ln or "slots" in ln)]
+    print("\n".join(serving_lines))
 
 
 if __name__ == "__main__":

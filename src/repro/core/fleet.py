@@ -64,6 +64,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import json
 import math
 from collections import deque
 from dataclasses import dataclass, field
@@ -271,6 +272,30 @@ class Migration:
 
 
 @dataclass
+class DeviceReport:
+    """End-of-run accounting for one fleet device (bit-exact across
+    engines and fleet cores, like everything else in ``FleetResult``)."""
+
+    index: int
+    failed: bool = False
+    failed_at: float = float("nan")
+    hp_service: Optional[str] = None
+    be_resident: List[str] = field(default_factory=list)
+    requests_done: int = 0
+    hp_busy_s: float = 0.0
+    be_busy_s: float = 0.0
+    clock: float = 0.0
+
+    @property
+    def hp_occupancy(self) -> float:
+        return self.hp_busy_s / self.clock if self.clock > 0 else 0.0
+
+    @property
+    def be_occupancy(self) -> float:
+        return self.be_busy_s / self.clock if self.clock > 0 else 0.0
+
+
+@dataclass
 class FleetResult:
     n_devices: int
     horizon: float
@@ -280,6 +305,8 @@ class FleetResult:
     migrations: List[Migration] = field(default_factory=list)
     unplaced: List[str] = field(default_factory=list)
     placements: List[Tuple[float, str, int]] = field(default_factory=list)
+    devices: List[DeviceReport] = field(default_factory=list)
+    self_profile: Optional[Dict[str, float]] = None   # wall clock, obs runs
 
     @property
     def cluster_goodput(self) -> float:
@@ -300,19 +327,57 @@ class FleetResult:
             if rep.device is not None)
         return (dedicated - self.n_devices * self.horizon) / 3600.0
 
-    def summary(self) -> Dict[str, float]:
+    def summary(self, per_device: bool = False) -> Dict[str, float]:
+        p99s = [s.p99 for s in self.services.values()
+                if math.isfinite(s.p99)]
+        slos = [s.slo_attainment for s in self.services.values()
+                if s.device is not None]
         out = {
             "cluster_goodput": self.cluster_goodput,
             "goodput_per_gpu": self.goodput_per_gpu,
             "gpu_hours_saved": self.gpu_hours_saved,
             "migrations": float(len(self.migrations)),
             "unplaced_jobs": float(len(self.unplaced)),
+            "worst_p99_ms": max(p99s) * 1e3 if p99s else float("nan"),
+            "mean_slo_attainment": (sum(slos) / len(slos)) if slos else 0.0,
+            "requests_done": float(sum(d.requests_done for d in self.devices)),
+            "failed_devices": float(sum(1 for d in self.devices if d.failed)),
         }
         for name, s in self.services.items():
             out[f"p99_ms/{name}"] = s.p99 * 1e3
             out[f"slo_attainment/{name}"] = s.slo_attainment
         for name, b in self.be_jobs.items():
             out[f"be_norm_tput/{name}"] = b.norm_tput
+        if per_device:
+            for d in self.devices:
+                out[f"device{d.index}/hp_occupancy"] = d.hp_occupancy
+                out[f"device{d.index}/be_occupancy"] = d.be_occupancy
+                out[f"device{d.index}/requests_done"] = float(d.requests_done)
+        return out
+
+    def to_json(self, path: Optional[str] = None) -> Dict:
+        """Full result as a JSON-serializable dict (summary + per-service /
+        per-job / per-device breakdowns + the raw decision lists); written
+        to ``path`` when given."""
+        out = {
+            "n_devices": self.n_devices,
+            "horizon": self.horizon,
+            "policy": self.policy,
+            "summary": self.summary(),
+            "services": {n: dataclasses.asdict(s)
+                         for n, s in self.services.items()},
+            "be_jobs": {n: dataclasses.asdict(b)
+                        for n, b in self.be_jobs.items()},
+            "devices": [dataclasses.asdict(d) for d in self.devices],
+            "migrations": [dataclasses.asdict(m) for m in self.migrations],
+            "placements": [list(p) for p in self.placements],
+            "unplaced": list(self.unplaced),
+        }
+        if self.self_profile is not None:
+            out["self_profile"] = self.self_profile
+        if path is not None:
+            with open(path, "w") as f:
+                json.dump(out, f, indent=1)
         return out
 
 
@@ -354,7 +419,7 @@ class FleetSimulator:
                  horizon: float = 60.0, check_interval: float = 5.0,
                  threshold: float = 0.0316e-3, max_be_per_device: int = 4,
                  min_window: int = 20, fast: bool = True, recorder=None,
-                 event_driven: bool = True,
+                 obs=None, event_driven: bool = True,
                  failures: Optional[List[DeviceFailure]] = None):
         if device_models is not None and len(device_models) != n_devices:
             raise ValueError("device_models length must equal n_devices")
@@ -383,13 +448,26 @@ class FleetSimulator:
         # optional repro.trace.TraceRecorder: every device engine records
         # into it under its fleet index; migrations tag the moved job
         self.recorder = recorder
+        # optional repro.obs.ObsHub: live telemetry + decision audit log
+        # (same contract as the recorder — opt-in, observation-only,
+        # bit-exact across engines and fleet cores)
+        self.obs = obs
         self.devices = [
             ManagedDevice(i, DeviceEngine(
                 m, horizon, threshold, fast=fast,
                 recorder=recorder.for_device(i) if recorder is not None
-                else None))
+                else None,
+                obs=obs.for_device(i) if obs is not None else None))
             for i, m in enumerate(models)
         ]
+        # core-independent placement-revision counter, bumped at the same
+        # logical spots as the event core's ``_EventState.rev`` (attach /
+        # migration / failure / departure); the audit log dedupes
+        # admission rejects on it so both cores log one reject per
+        # (job, revision) even though the lockstep core retries placement
+        # at every decision point
+        self._rev = 0
+        self._prof = None
         # victim selection shares the interference-aware policy's memoized
         # estimator when available, so each (workload, device) pair is
         # profiled at most once per fleet
@@ -489,14 +567,39 @@ class FleetSimulator:
             return base
         return scale_to_load(base, iso, job.load)
 
+    def _obs_snapshot(self, views: List[DeviceView]) -> List[List]:
+        """Candidate-device snapshot for audit records. Occupancy values
+        are included only when the policy actually read them (the event
+        core syncs engines for exactly those reads; anything else would be
+        stale there and break cross-core log equality)."""
+        if self.policy.reads_occupancy:
+            return [[v.index, v.has_hp, v.n_be, v.hp_occupancy]
+                    for v in views]
+        return [[v.index, v.has_hp, v.n_be] for v in views]
+
     def _place(self, job: JobSpec, now: float) -> bool:
-        idx = self.policy.place(job.kind, job.workload, self._views(now))
+        prof = self._prof
+        if prof is None:
+            return self._place_impl(job, now)
+        prof.push("placement")
+        try:
+            return self._place_impl(job, now)
+        finally:
+            prof.pop()
+
+    def _place_impl(self, job: JobSpec, now: float) -> bool:
+        views = self._views(now)
+        idx = self.policy.place(job.kind, job.workload, views)
         if idx is None:
             if self._evt is not None:
                 # feasibility depends only on attach/detach structure
                 # (HP slot free, BE headroom), so this kind cannot place
                 # again until the fleet revision changes
                 self._evt.blocked[job.kind] = self._evt.rev
+            if self.obs is not None:
+                self.obs.admission_reject(now, job.name, job.kind,
+                                          self._rev,
+                                          self._obs_snapshot(views))
             return False
         d = self.devices[idx]
         self._sync(d, now)       # event core: engine at `now` before attach
@@ -517,9 +620,14 @@ class FleetSimulator:
                    trace.arrivals.tobytes())
             ref = _ISO_MEMO.get(key)
             if ref is None:
+                prof = self._prof
+                if prof is not None:
+                    prof.push("iso_ref")
                 iso = simulate("tally", job.workload, [], trace, d.dev,
                                duration=self.horizon - now,
                                threshold=self.threshold, fast=self.fast)
+                if prof is not None:
+                    prof.pop()
                 ref = _IsoRef(p99=iso.latency.p99(),
                               count=iso.latency.count)
                 _ISO_MEMO[key] = ref
@@ -557,6 +665,10 @@ class FleetSimulator:
             if self._evt is not None:
                 self._evt.job_device[job.name] = idx
         self._placements.append((now, job.name, idx))
+        self._rev += 1
+        if self.obs is not None:
+            self.obs.placement(now, job.name, job.kind, idx,
+                               self._obs_snapshot(views))
         if self._evt is not None:
             self._evt.rev += 1
             self._schedule(d)
@@ -582,19 +694,41 @@ class FleetSimulator:
         d.feed_window()
         if d.window.count < self.min_window:
             return False                     # accumulate until checkable
+        wcount = d.window.count
         bound = d.hp_job.slo_factor * d.iso.p99
         est = d.window_p99()
         d.consume_window()
-        if not math.isfinite(bound) or est <= bound:
+        breach = math.isfinite(bound) and est > bound
+        if self.obs is not None:
+            # a device reaching an actual evaluation is synced at `now` in
+            # both cores (unsynced devices cannot have reached min_window),
+            # so the occupancy sample and the audit inputs are exact and
+            # core-invariant
+            ex = d.engine.ex
+            probe = self.obs.for_device(d.index)
+            probe.occupancy(now, ex.hp_busy_time, ex.be_busy_time)
+            self.obs.slo_check(now, d.index, d.hp_job.name, est, bound,
+                               wcount, breach)
+        if not breach:
             return False
         # violation: evict the most disruptive BE job, carrying progress
         victim = max(d.be_jobs,
                      key=lambda n: self._disruption(
                          d.be_jobs[n].workload, d.dev))
         job = d.be_jobs[victim]
-        idx = self.policy.place("be_train", job.workload,
-                                self._views(now, exclude=d.index))
+        scores = None
+        if self.obs is not None:
+            # victim-selection inputs (the estimator is memoized, so this
+            # re-reads cached scores — no new profiling)
+            scores = {n: self._disruption(d.be_jobs[n].workload, d.dev)
+                      for n in d.be_jobs}
+        mig_views = self._views(now, exclude=d.index)
+        idx = self.policy.place("be_train", job.workload, mig_views)
         if idx is None:
+            if self.obs is not None:
+                self.obs.migration_blocked(now, victim, d.index,
+                                           d.hp_job.name, est, bound,
+                                           wcount)
             return False           # nowhere to go: stay (next check retries)
         dst = self.devices[idx]
         activate = (self._evt is not None and dst.hp_job is not None
@@ -621,6 +755,11 @@ class FleetSimulator:
         dst.be_jobs[victim] = job
         dst.be_placed_at[victim] = placed_at
         self.migrations.append(Migration(now, victim, d.index, idx))
+        self._rev += 1
+        if self.obs is not None:
+            self.obs.migration(now, victim, d.index, idx, d.hp_job.name,
+                               est, bound, wcount, scores,
+                               self._obs_snapshot(mig_views))
         if self.recorder is not None:
             self.recorder.migrate(now, victim, d.index, idx)
         if self._evt is not None:
@@ -670,15 +809,20 @@ class FleetSimulator:
             self._sync(d, now)     # event core; lockstep already advanced
             d.failed = True
             d.failed_at = now
+            requeued = []
             for name in list(d.be_jobs):
                 client = d.engine.detach_be(name)
                 job = d.be_jobs.pop(name)
                 d.be_placed_at.pop(name, None)
                 self._failover[name] = client
                 self._pending.append(job)
+                requeued.append(name)
                 if self._evt is not None:
                     self._evt.job_device.pop(name, None)
                     self._evt.pending_kinds[job.kind] += 1
+            self._rev += 1
+            if self.obs is not None:
+                self.obs.device_failure(now, f.device, requeued)
             if self._evt is not None:
                 self._evt.rev += 1
                 d._act_time = math.inf   # stale out any queued entry
@@ -692,6 +836,9 @@ class FleetSimulator:
                 d.engine.detach_be(n)
                 del d.be_jobs[n]
                 self._departed[n] = d.index
+                self._rev += 1
+                if self.obs is not None:
+                    self.obs.departure(now, n, d.index)
             if done and not d.be_jobs:
                 d._deactivated_at = now
 
@@ -720,6 +867,9 @@ class FleetSimulator:
                 self._departed[n] = d.index
                 evt.job_device.pop(n, None)
                 evt.rev += 1
+                self._rev += 1
+                if self.obs is not None:
+                    self.obs.departure(now, n, d.index)
             if done:
                 if not d.be_jobs:
                     d._deactivated_at = now
@@ -773,12 +923,22 @@ class FleetSimulator:
                          if f.time <= self.horizon]
         self._points.append(self.horizon)
         heapq.heapify(self._points)
+        if self.obs is not None:
+            self.obs.bind_run(
+                n_devices=len(self.devices), policy=self.policy.name,
+                horizon=self.horizon, check_interval=self.check_interval,
+                threshold=self.threshold, fast=self.fast,
+                event_driven=self.event_driven)
+            self._prof = self.obs.prof
+            self._prof.start()
         if self.event_driven:
             self._run_events(arrivals)
         else:
             self._run_lockstep(arrivals)
         for d in self.devices:
             d.engine.finalize()
+        if self._prof is not None:
+            self._prof.stop()
         return self._collect(jobs)
 
     def _run_lockstep(self, arrivals: List[JobSpec]) -> None:
@@ -795,12 +955,21 @@ class FleetSimulator:
             # final advance keeps single-run semantics (the event crossing
             # the horizon is still recorded) — the 1-GPU equivalence
             # contract depends on both
+            prof = self._prof
+            if prof is not None:
+                prof.push("advance")
             for d in self.devices:
                 if not d.failed:
                     d.engine.advance(t, strict=(t < self.horizon))
+            if prof is not None:
+                prof.pop()
             self._fail_devices(t)
             if t > 0.0:
+                if prof is not None:
+                    prof.push("slo")
                 self._check_slo(t)
+                if prof is not None:
+                    prof.pop()
                 self._depart_finished(t)
             while arr_i < len(arrivals) and arrivals[arr_i].arrival <= t:
                 pending.append(arrivals[arr_i])
@@ -833,6 +1002,9 @@ class FleetSimulator:
                 continue
             evt.prev_point = prev
             prev = t
+            prof = self._prof
+            if prof is not None:
+                prof.push("advance")
             if t >= self.horizon:
                 # the final advance is non-strict and must consume the
                 # event crossing the horizon on every device, exactly
@@ -847,9 +1019,15 @@ class FleetSimulator:
                         due.add(i)
                 for i in sorted(due):
                     self._sync(devices[i], t)
+            if prof is not None:
+                prof.pop()
             self._fail_devices(t)
             if t > 0.0:
+                if prof is not None:
+                    prof.push("slo")
                 self._check_slo_events(t)
+                if prof is not None:
+                    prof.pop()
                 self._depart_finished_events(t)
             while arr_i < len(arrivals) and arrivals[arr_i].arrival <= t:
                 pending.append(arrivals[arr_i])
@@ -897,6 +1075,18 @@ class FleetSimulator:
             else:
                 result.be_jobs[job.name] = self._be_report(
                     job, placed_at.get(job.name))
+        for d in self.devices:
+            eng = d.engine
+            result.devices.append(DeviceReport(
+                index=d.index, failed=d.failed, failed_at=d.failed_at,
+                hp_service=d.hp_job.name if d.hp_job is not None else None,
+                be_resident=list(d.be_jobs),
+                requests_done=eng.book.latency.count,
+                hp_busy_s=eng.ex.hp_busy_time,
+                be_busy_s=eng.ex.be_busy_time,
+                clock=eng.ex.clock))
+        if self.obs is not None:
+            result.self_profile = self.obs.prof.report()
         return result
 
     def _service_report(self, job: JobSpec,

@@ -143,6 +143,8 @@ class TallyScheduler:
         self.profiler = profiler
         self.ex = executor
         self.transforms_enabled = transforms_enabled
+        self.obs = None     # optional obs.DeviceProbe (observation-only;
+        #                     None keeps every path branch-free)
 
     # -- client membership (fleet layer: jobs arrive / migrate at runtime) ----
 
@@ -152,11 +154,19 @@ class TallyScheduler:
         constructor that received them all up front)."""
         self.clients.append(client)
         self.clients.sort(key=lambda c: c.priority)
+        if self.obs is not None:
+            # attach happens at synced decision points, so the timestamp
+            # is core-invariant
+            self.obs.residency(self.ex.now(), client.job_id,
+                               client.priority, 1.0)
 
     def remove_client(self, client: Client) -> None:
         """Detach a client (BE migration). The caller must first cancel or
         drain any in-flight launch owned by this client."""
         self.clients.remove(client)
+        if self.obs is not None:
+            self.obs.residency(self.ex.now(), client.job_id,
+                               client.priority, -1.0)
 
     # -- policy ---------------------------------------------------------------
 
@@ -204,6 +214,8 @@ class TallyScheduler:
         cfg = self.profiler.lookup_launch_config(kernel)
         if cfg is None:
             cfg = self.profiler.launch_and_profile(kernel)
+            if self.obs is not None:
+                self.obs.profiled(kernel.name)
         return cfg
 
     # -- completion callbacks (wired by the executor) --------------------------

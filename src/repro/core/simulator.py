@@ -138,20 +138,30 @@ class Bookkeeper:
         self.be_tput: Dict[str, ThroughputStats] = {}
         self.requests: Dict[int, _Request] = {}
         self.meta: Dict[str, float] = {}
+        self.obs = None          # optional obs.DeviceProbe (same contract
+        #                          as the recorder: None keeps paths bare)
 
     def arrival(self, rid: int, t: float) -> None:
         self.requests[rid] = _Request(rid, t)
+        if self.obs is not None:
+            self.obs.arrival(t)
 
     def request_done(self, rid: int, t: float, samples: float) -> None:
         r = self.requests[rid]
         if not r.done:
             r.done = True
-            self.latency.record(t - r.arrival)
+            lat = t - r.arrival
+            self.latency.record(lat)
             self.hp_tput.record(samples)
+            if self.obs is not None:
+                self.obs.request_done(t, lat, samples)
 
-    def iteration_done(self, client_name: str, samples: float) -> None:
+    def iteration_done(self, client_name: str, samples: float,
+                       t: Optional[float] = None) -> None:
         self.be_tput.setdefault(
             client_name, ThroughputStats(span=self.duration)).record(samples)
+        if self.obs is not None:
+            self.obs.iteration(t, client_name, samples)
 
 
 def _expand_requests(hp: Workload, trace: TrafficTrace, duration: float
@@ -201,6 +211,7 @@ class SimExecutor:
         self.samples_per_request = samples_per_request
         self.rec = None          # optional trace DeviceRecorder (read-only
         #                          hooks; None keeps every path branch-free)
+        self.obs = None          # optional obs.DeviceProbe (same contract)
         self.events: List[Tuple[float, int, int, Any]] = []
         # mirror of queued ARRIVAL times: sorted list + consumed cursor
         # (arrivals pop in time order, so consumption is an index bump)
@@ -277,7 +288,8 @@ class SimExecutor:
                                       inf.prog.watermark + done)
         if client.current is None:               # kernel happened to finish
             wl = client.workload
-            self.book.iteration_done(client.name, wl.samples_per_kernel)
+            self.book.iteration_done(client.name, wl.samples_per_kernel,
+                                     self.clock)
             if wl.host_gap > 0:
                 client.not_ready_until = self.clock + wl.host_gap
         return True
@@ -343,6 +355,12 @@ class SimExecutor:
                 if self.rec is not None:
                     self.rec.preempt(self.clock, inf.client,
                                      inf.prog.pending.kernel, drain_end)
+                if self.obs is not None:
+                    # effective preemptions only ever happen through this
+                    # reference-engine branch (the fast path bails on any
+                    # preempt-mode launch crossing an arrival), so the
+                    # count is engine-invariant
+                    self.obs.preempt(self.clock)
                 lid = next(self._launch_ids)    # supersede completion event
                 inf.launch_id = lid
                 self._push(inf.end, COMPLETE, lid)
@@ -407,7 +425,8 @@ class SimExecutor:
                     if inf.client.current is None:       # kernel finished
                         wl = inf.client.workload
                         self.book.iteration_done(inf.client.name,
-                                                 wl.samples_per_kernel)
+                                                 wl.samples_per_kernel,
+                                                 self.clock)
                         if wl.host_gap > 0:              # input-stall gap
                             inf.client.not_ready_until = (self.clock
                                                           + wl.host_gap)
@@ -1059,6 +1078,12 @@ class _FastForward:
                     self._pins[id(c)] = c
                 tput, spk = acc
                 tput.samples += spk
+                obs = ex.book.obs
+                if obs is not None:
+                    # mirror of ``Bookkeeper.iteration_done``'s hook (this
+                    # path inlines the bookkeeping, bypassing the method);
+                    # same args as the reference COMPLETE branch
+                    obs.iteration(end, c.name, spk)
                 if wl.host_gap > 0:
                     wake = end + wl.host_gap
                     c.not_ready_until = wake
@@ -1146,7 +1171,7 @@ class DeviceEngine:
     def __init__(self, dev: DeviceModel = A100, duration: float = 60.0,
                  threshold: float = 0.0316e-3, *,
                  transforms_enabled: bool = True, fast: bool = True,
-                 recorder=None):
+                 recorder=None, obs=None):
         self.dev = dev
         self.duration = duration
         self.book = Bookkeeper(duration)
@@ -1159,11 +1184,21 @@ class DeviceEngine:
             recorder = recorder.for_device(0)
         self.rec = recorder
         self.ex.rec = recorder
+        # obs: an ``obs.ObsHub`` (observed as device 0) or a ``DeviceProbe``
+        # handed out by the fleet; duck-typed exactly like the recorder
+        if obs is not None and hasattr(obs, "for_device"):
+            obs = obs.for_device(0)
+        if obs is not None:
+            obs.bind(duration)
+        self.obs = obs
+        self.book.obs = obs
+        self.ex.obs = obs
         self.profiler = TransparentProfiler(make_measure(dev), dev.sm_count,
                                             turnaround_bound=threshold,
                                             deterministic=True)
         self.sched = TallyScheduler([], self.profiler, self.ex,
                                     transforms_enabled=transforms_enabled)
+        self.sched.obs = obs
         self.ex.scheduler = self.sched
         self.fast = fast
         self._ff = _FastForward(self) if fast else None
@@ -1305,6 +1340,10 @@ class DeviceEngine:
     def finalize(self) -> Bookkeeper:
         self.book.meta = {"profiled_kernels": self.profiler.profiled_kernels,
                           "profile_time_s": self.profiler.profile_time}
+        if self.obs is not None:
+            self.obs.finalize(self.ex.clock, self.ex.hp_busy_time,
+                              self.ex.be_busy_time, self.book.latency.count,
+                              self.profiler.profiled_kernels)
         return self.book
 
     # -- load introspection (placement signals) --------------------------------
@@ -1320,15 +1359,18 @@ class DeviceEngine:
 def _run_priority(policy: str, hp: Optional[Workload], bes: List[Workload],
                   trace: Optional[TrafficTrace], dev: DeviceModel,
                   duration: float, threshold: float,
-                  fast: bool = True, recorder=None) -> Bookkeeper:
+                  fast: bool = True, recorder=None, obs=None) -> Bookkeeper:
     if recorder is not None and hasattr(recorder, "meta"):
         import dataclasses as _dc
         recorder.meta.setdefault("run", {
             "policy": policy, "duration": duration, "threshold": threshold,
             "fast": fast, "device": _dc.asdict(dev)})
+    if obs is not None and hasattr(obs, "bind_run"):
+        obs.bind_run(policy=policy, duration=duration, threshold=threshold,
+                     fast=fast)
     eng = DeviceEngine(dev, duration, threshold,
                        transforms_enabled=(policy == "tally"), fast=fast,
-                       recorder=recorder)
+                       recorder=recorder, obs=obs)
     if hp is not None:
         eng.attach_hp(hp, trace)
     for w in bes:
@@ -1391,7 +1433,7 @@ def _finish_kernel(st: _Stream, book: Bookkeeper, clock: float,
         if pk.last_of_request:
             book.request_done(pk.request_id, clock, wl.samples_per_iteration)
     else:
-        book.iteration_done(st.client.name, wl.samples_per_kernel)
+        book.iteration_done(st.client.name, wl.samples_per_kernel, clock)
         if wl.host_gap > 0:
             st.client.not_ready_until = clock + wl.host_gap
 
@@ -1535,7 +1577,7 @@ def _run_tgs(hp: Optional[Workload], bes: List[Workload],
             return False
         dur = bpk.kernel.duration(dev)
         clock += dur                     # runs to completion (no preempt)
-        book.iteration_done(c.name, c.workload.samples_per_kernel)
+        book.iteration_done(c.name, c.workload.samples_per_kernel, clock)
         if c.workload.host_gap > 0:
             c.not_ready_until = clock + c.workload.host_gap
         # adaptive rate control (TGS feedback loop): back off hard when
@@ -1657,17 +1699,23 @@ def _run_timeslice(hp: Optional[Workload], bes: List[Workload],
 def simulate(policy: str, hp: Optional[Workload], bes: List[Workload],
              trace: Optional[TrafficTrace], dev: DeviceModel = A100,
              duration: float = 60.0, threshold: float = 0.0316e-3,
-             fast: bool = True, recorder=None) -> Bookkeeper:
+             fast: bool = True, recorder=None, obs=None) -> Bookkeeper:
     """``fast=False`` forces the reference per-kernel event loop for the
     priority engines (equivalence tests, perf baselines); the fluid/TGS/
     time-slicing engines have a single implementation either way.
     ``recorder`` (a ``repro.trace.TraceRecorder``) captures the schedule
-    at kernel granularity — priority engines only."""
+    at kernel granularity — priority engines only. ``obs`` (a
+    ``repro.obs.ObsHub``) samples live telemetry — priority engines only,
+    bit-exact with the fast path like the recorder."""
     if policy in ("tally", "tally_kernel"):
         return _run_priority(policy, hp, bes, trace, dev, duration,
-                             threshold, fast=fast, recorder=recorder)
+                             threshold, fast=fast, recorder=recorder,
+                             obs=obs)
     if recorder is not None:
         raise ValueError(f"trace recording is only supported for the "
+                         f"priority engines, not {policy!r}")
+    if obs is not None:
+        raise ValueError(f"telemetry is only supported for the "
                          f"priority engines, not {policy!r}")
     if policy in ("no_sched", "mps", "mps_priority"):
         return _run_concurrent(policy, hp, bes, trace, dev, duration)

@@ -30,7 +30,7 @@ from repro.serving import Request, ServingConfig, ServingEngine
 def serve(arch: str, *, requests: int = 16, capacity: int = 4,
           max_len: int = 96, max_new_tokens: int = 8,
           colocate_train: bool = False, seed: int = 0,
-          mean_rate: float = 50.0) -> dict:
+          mean_rate: float = 50.0, obs=None) -> dict:
     cfg = get_config(arch).reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(seed))
@@ -59,7 +59,7 @@ def serve(arch: str, *, requests: int = 16, capacity: int = 4,
             be_state["quanta"] += 1
 
     engine = ServingEngine(model, params, ServingConfig(capacity, max_len),
-                           best_effort_hook=be_step)
+                           best_effort_hook=be_step, obs=obs)
     rng = np.random.default_rng(seed)
     trace = maf2_like_trace(duration=requests / mean_rate * 2,
                             mean_rate=mean_rate, seed=seed)

@@ -1,0 +1,45 @@
+"""Live telemetry for the simulator, scheduler, and fleet (layer 2.5).
+
+==============  ============================================================
+Module          Provides
+==============  ============================================================
+``registry``    ``MetricsRegistry`` — labeled counters / gauges /
+                fixed-bucket histograms / timelines / binned series
+``audit``       ``AuditLog`` — structured scheduler-decision log with a
+                flight-recorder ring mode and "why was X moved" queries
+``probes``      ``ObsHub`` / ``DeviceProbe`` — the opt-in hook surface
+                the engines and the fleet call (``obs=`` parameter)
+``expose``      Prometheus-text + JSONL exposition (exact round trip),
+                grid resampling
+``dashboard``   ``render_dashboard`` — self-contained HTML fleet dashboard
+``selfprof``    ``SelfProfiler`` — wall-clock accounting of the simulator
+                itself (excluded from the determinism contract)
+==============  ============================================================
+
+Contract (mirrors the trace layer): opt-in — every engine call site is
+guarded by ``obs is None``, so a bare run pays exactly nothing;
+observation-only — hooks read already-computed clocks and never feed
+back; bit-exact — fast vs reference engines and lockstep vs event-driven
+fleet cores drive identical hook sequences, so registries, timelines, and
+audit logs are byte-identical and simulated results are unchanged
+(``tests/test_obs.py``, ``tests/test_fleet_events.py``; overhead gated
+<5% by the ``obs_overhead`` tier in ``benchmarks/perf_bench.py``).
+"""
+from .audit import AuditLog, AuditRecord
+from .dashboard import render_dashboard
+from .expose import (binned_rate, from_jsonl, parse_prometheus_text,
+                     prometheus_text, registry_from_jsonl, resample,
+                     to_jsonl)
+from .probes import DeviceProbe, ObsHub, ServingProbe
+from .registry import (DEFAULT_BUCKETS, BinnedSeries, Counter, Gauge,
+                       Histogram, MetricsRegistry, Timeline)
+from .selfprof import SelfProfiler
+
+__all__ = [
+    "AuditLog", "AuditRecord", "render_dashboard", "binned_rate",
+    "from_jsonl", "parse_prometheus_text", "prometheus_text",
+    "registry_from_jsonl", "resample", "to_jsonl", "DeviceProbe", "ObsHub",
+    "ServingProbe",
+    "DEFAULT_BUCKETS", "BinnedSeries", "Counter", "Gauge", "Histogram",
+    "MetricsRegistry", "Timeline", "SelfProfiler",
+]

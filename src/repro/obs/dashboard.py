@@ -1,0 +1,297 @@
+"""Self-contained HTML dashboard for a fleet run.
+
+``render_dashboard(result, hub, path)`` turns any ``FleetResult`` plus the
+``ObsHub`` that observed it into a single HTML file with inline SVG — no
+external JS/CSS/CDN (the dev container is offline), so the file is a
+portable run artifact (CI uploads the fig9 one).
+
+Lanes, top to bottom: run summary + simulator self-profile; per-device
+occupancy lanes (HP green / BE blue, migration + failure markers); HP
+request p99 vs the SLO bound per service; BE throughput per job;
+audit-log tail.
+"""
+from __future__ import annotations
+
+import html as _html
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .expose import binned_rate
+from .probes import ObsHub
+
+_PALETTE = ("#2f7ed8", "#d84b2f", "#2fa84b", "#8b2fd8", "#d8a02f",
+            "#2fc5d8", "#d82f93", "#6b7280")
+
+_CSS = """
+body { font: 13px/1.45 system-ui, sans-serif; margin: 24px; color: #1f2430; }
+h1 { font-size: 20px; } h2 { font-size: 15px; margin: 26px 0 6px; }
+.meta { color: #6b7280; margin-bottom: 14px; }
+table { border-collapse: collapse; font-size: 12px; }
+td, th { border: 1px solid #d7dae0; padding: 3px 8px; text-align: right; }
+th { background: #f3f4f6; }
+svg { background: #fbfcfe; border: 1px solid #e2e5ea; }
+.legend span { margin-right: 14px; }
+.swatch { display: inline-block; width: 10px; height: 10px;
+          margin-right: 4px; border-radius: 2px; }
+"""
+
+
+def _esc(s) -> str:
+    return _html.escape(str(s))
+
+
+def _fmt(v, nd: int = 3) -> str:
+    if isinstance(v, float):
+        if v != v:
+            return "nan"
+        return f"{v:.{nd}g}" if abs(v) < 1e4 else f"{v:,.0f}"
+    return str(v)
+
+
+def _axes(x0: float, x1: float, y0: float, y1: float, w: int, h: int,
+          pad: int = 36) -> List[str]:
+    """Frame + 5 tick labels per axis; returns svg fragments."""
+    out = [f'<rect x="{pad}" y="8" width="{w - pad - 8}" '
+           f'height="{h - pad - 8}" fill="none" stroke="#c9cdd4"/>']
+    for i in range(5):
+        fx = i / 4
+        x = pad + fx * (w - pad - 8)
+        y = h - pad + 2
+        out.append(f'<text x="{x:.1f}" y="{y + 11}" font-size="10" '
+                   f'text-anchor="middle" fill="#6b7280">'
+                   f'{_fmt(x0 + fx * (x1 - x0))}</text>')
+        fy = i / 4
+        yy = (h - pad) - fy * (h - pad - 16)
+        out.append(f'<text x="{pad - 4}" y="{yy + 3:.1f}" font-size="10" '
+                   f'text-anchor="end" fill="#6b7280">'
+                   f'{_fmt(y0 + fy * (y1 - y0))}</text>')
+    return out
+
+
+def _line_chart(series: Dict[str, Tuple[Sequence[float], Sequence[float]]],
+                *, w: int = 860, h: int = 220, x1: float,
+                hline: Optional[Dict[str, float]] = None,
+                markers: Sequence[Tuple[float, str, str]] = (),
+                ylabel: str = "") -> str:
+    pad = 36
+    ys_all = [v for _, (xs, ys) in series.items() for v in ys
+              if math.isfinite(v)]
+    if hline:
+        ys_all += [v for v in hline.values() if math.isfinite(v)]
+    ymax = max(ys_all) * 1.08 if ys_all else 1.0
+    ymax = ymax or 1.0
+    x1 = x1 or 1.0
+
+    def px(x):
+        return pad + (x / x1) * (w - pad - 8)
+
+    def py(y):
+        return (h - pad) - (y / ymax) * (h - pad - 16)
+
+    parts = [f'<svg width="{w}" height="{h}" '
+             f'xmlns="http://www.w3.org/2000/svg">']
+    parts += _axes(0.0, x1, 0.0, ymax, w, h, pad)
+    for t, color, label in markers:
+        parts.append(
+            f'<line x1="{px(t):.1f}" y1="16" x2="{px(t):.1f}" '
+            f'y2="{h - pad}" stroke="{color}" stroke-dasharray="3,3">'
+            f'<title>{_esc(label)}</title></line>')
+    if hline:
+        for name, v in hline.items():
+            parts.append(
+                f'<line x1="{pad}" y1="{py(v):.1f}" x2="{w - 8}" '
+                f'y2="{py(v):.1f}" stroke="#9aa0aa" stroke-dasharray="6,4">'
+                f'<title>{_esc(name)}</title></line>')
+    for i, (name, (xs, ys)) in enumerate(sorted(series.items())):
+        color = _PALETTE[i % len(_PALETTE)]
+        pts = " ".join(f"{px(x):.1f},{py(y):.1f}"
+                       for x, y in zip(xs, ys) if math.isfinite(y))
+        if pts:
+            parts.append(f'<polyline points="{pts}" fill="none" '
+                         f'stroke="{color}" stroke-width="1.5">'
+                         f'<title>{_esc(name)}</title></polyline>')
+    if ylabel:
+        parts.append(f'<text x="6" y="14" font-size="10" fill="#6b7280">'
+                     f'{_esc(ylabel)}</text>')
+    parts.append("</svg>")
+    legend = "".join(
+        f'<span><span class="swatch" style="background:'
+        f'{_PALETTE[i % len(_PALETTE)]}"></span>{_esc(n)}</span>'
+        for i, n in enumerate(sorted(series)))
+    return f'{"".join(parts)}<div class="legend">{legend}</div>'
+
+
+def _device_lanes(result, hub: ObsHub, *, w: int = 860,
+                  max_lanes: int = 32) -> str:
+    """One lane per device: HP (green) and BE (blue) busy fraction per
+    inter-sample segment of the cumulative busy-seconds timelines."""
+    devices = getattr(result, "devices", []) or []
+    horizon = max((d.clock for d in devices), default=0.0) or 1.0
+    shown = devices[:max_lanes]
+    lane_h, gap, pad = 16, 4, 36
+    h = 24 + len(shown) * (lane_h + gap) + 24
+    parts = [f'<svg width="{w}" height="{h}" '
+             f'xmlns="http://www.w3.org/2000/svg">']
+
+    def px(x):
+        return pad + (x / horizon) * (w - pad - 8)
+
+    mig_by_dev: Dict[int, List] = {}
+    for m in getattr(result, "migrations", []):
+        mig_by_dev.setdefault(m.src, []).append(m)
+        mig_by_dev.setdefault(m.dst, []).append(m)
+    for li, d in enumerate(shown):
+        y = 20 + li * (lane_h + gap)
+        parts.append(f'<text x="{pad - 4}" y="{y + lane_h - 4}" '
+                     f'font-size="10" text-anchor="end" fill="#6b7280">'
+                     f'd{d.index}</text>')
+        parts.append(f'<rect x="{pad}" y="{y}" width="{w - pad - 8}" '
+                     f'height="{lane_h}" fill="#eef0f4"/>')
+        for fam, color, row in (
+                (hub._occ_hp, "#2fa84b", 0), (hub._occ_be, "#2f7ed8", 1)):
+            tl = fam._children.get((str(d.index),))
+            pts = list(zip(tl.ts, tl.vs)) if tl is not None else []
+            final = d.hp_busy_s if row == 0 else d.be_busy_s
+            pts.append((d.clock, final))
+            prev_t, prev_v = 0.0, 0.0
+            for t, v in pts:
+                dt = t - prev_t
+                if dt > 0:
+                    frac = max(0.0, min(1.0, (v - prev_v) / dt))
+                    if frac > 0.005:
+                        parts.append(
+                            f'<rect x="{px(prev_t):.1f}" '
+                            f'y="{y + row * lane_h / 2:.1f}" '
+                            f'width="{max(0.5, px(t) - px(prev_t)):.1f}" '
+                            f'height="{lane_h / 2}" fill="{color}" '
+                            f'opacity="{0.15 + 0.85 * frac:.2f}">'
+                            f'<title>d{d.index} '
+                            f'{"hp" if row == 0 else "be"} '
+                            f'{frac:.0%} over [{prev_t:.1f},{t:.1f}]s'
+                            f'</title></rect>')
+                prev_t, prev_v = t, v
+        for m in mig_by_dev.get(d.index, ()):
+            color = "#d84b2f" if m.src == d.index else "#d8a02f"
+            parts.append(
+                f'<line x1="{px(m.time):.1f}" y1="{y}" '
+                f'x2="{px(m.time):.1f}" y2="{y + lane_h}" stroke="{color}" '
+                f'stroke-width="2"><title>t={m.time:.2f}s {_esc(m.job)} '
+                f'd{m.src}&#8594;d{m.dst}</title></line>')
+        if d.failed:
+            parts.append(
+                f'<line x1="{px(d.failed_at):.1f}" y1="{y}" '
+                f'x2="{px(d.failed_at):.1f}" y2="{y + lane_h}" '
+                f'stroke="#111" stroke-width="2">'
+                f'<title>d{d.index} failed at t={d.failed_at:.2f}s'
+                f'</title></line>')
+    parts.append("</svg>")
+    note = (f"<div class='meta'>showing {len(shown)} of {len(devices)} "
+            f"devices</div>" if len(devices) > len(shown) else "")
+    legend = ('<div class="legend">'
+              '<span><span class="swatch" style="background:#2fa84b">'
+              '</span>HP busy</span>'
+              '<span><span class="swatch" style="background:#2f7ed8">'
+              '</span>BE busy</span>'
+              '<span><span class="swatch" style="background:#d84b2f">'
+              '</span>migration out</span>'
+              '<span><span class="swatch" style="background:#d8a02f">'
+              '</span>migration in</span></div>')
+    return "".join(parts) + legend + note
+
+
+def _rolling_p99(ts: Sequence[float], vs: Sequence[float],
+                 window: int = 64) -> Tuple[List[float], List[float]]:
+    xs, ys = [], []
+    for i in range(len(ts)):
+        lo = max(0, i + 1 - window)
+        xs.append(ts[i])
+        ys.append(float(np.percentile(vs[lo:i + 1], 99)))
+    return xs, ys
+
+
+def render_dashboard(result, hub: ObsHub, path: Optional[str] = None,
+                     title: str = "Tally fleet run") -> str:
+    """Render the dashboard; returns the HTML (and writes ``path``)."""
+    horizon = max((d.clock for d in getattr(result, "devices", [])),
+                  default=0.0)
+    summary = result.summary() if hasattr(result, "summary") else {}
+    head_cells = "".join(
+        f"<tr><th>{_esc(k)}</th><td>{_fmt(v, 5)}</td></tr>"
+        for k, v in summary.items() if not isinstance(v, (list, dict)))
+    prof = getattr(result, "self_profile", None)
+    prof_html = ""
+    if prof:
+        rows = "".join(
+            f"<tr><th>{_esc(k)}</th><td>{_fmt(v, 4)}</td></tr>"
+            for k, v in prof.items())
+        prof_html = (f"<h2>Simulator self-profile (wall clock)</h2>"
+                     f"<table>{rows}</table>")
+
+    # HP p99 vs SLO bound, one line per service
+    p99_series: Dict[str, Tuple[List[float], List[float]]] = {}
+    bounds: Dict[str, float] = {}
+    for s in getattr(result, "services", {}).values():
+        if s.device is None:
+            continue
+        tl = hub._latency_tl._children.get((str(s.device),))
+        if tl is not None and tl.ts:
+            xs, ys = _rolling_p99(tl.ts, tl.vs)
+            p99_series[s.name] = (xs, [y * 1e3 for y in ys])
+    for r in hub.audit.filter(kind="slo_check"):
+        b = r.details.get("bound", math.inf)
+        if math.isfinite(b):
+            bounds[f"SLO bound {r.job}"] = b * 1e3
+    mig_markers = [(m.time, "#d84b2f", f"{m.job} d{m.src}->d{m.dst}")
+                   for m in getattr(result, "migrations", [])]
+
+    # BE throughput per job (binned series summed over devices)
+    be_series: Dict[str, Tuple[List[float], List[float]]] = {}
+    fam = hub.registry.get("tally_be_samples_series")
+    if fam is not None:
+        by_job: Dict[str, np.ndarray] = {}
+        centers = None
+        for (dev, job), b in fam.items():
+            centers, rates = binned_rate(b)
+            acc = by_job.get(job)
+            by_job[job] = rates if acc is None else acc + rates
+        for job, rates in by_job.items():
+            be_series[job] = (list(centers), list(rates))
+
+    audit_tail = hub.audit.records[-30:]
+    audit_rows = "".join(
+        f"<tr><td>{r.t:.3f}</td><td>{_esc(r.kind)}</td>"
+        f"<td>{_esc(r.job)}</td><td>{'' if r.device is None else r.device}"
+        f"</td><td style='text-align:left'>{_esc(r.details)}</td></tr>"
+        for r in audit_tail)
+    dropped = (f" ({hub.audit.dropped} older records dropped by the "
+               f"flight recorder)" if hub.audit.dropped else "")
+
+    meta = ", ".join(f"{k}={_fmt(v, 5)}" for k, v in hub.meta.items())
+    parts = [
+        "<!DOCTYPE html><html><head><meta charset='utf-8'>",
+        f"<title>{_esc(title)}</title><style>{_CSS}</style></head><body>",
+        f"<h1>{_esc(title)}</h1>",
+        f"<div class='meta'>{_esc(meta)}</div>",
+        f"<h2>Run summary</h2><table>{head_cells}</table>",
+        prof_html,
+        "<h2>Per-device occupancy (HP / BE busy fraction)</h2>",
+        _device_lanes(result, hub),
+        "<h2>HP rolling p99 vs SLO bound (ms)</h2>",
+        _line_chart(p99_series, x1=horizon, hline=bounds,
+                    markers=mig_markers, ylabel="ms"),
+        "<h2>BE throughput (samples/s, summed over devices)</h2>",
+        _line_chart(be_series, x1=horizon, markers=mig_markers,
+                    ylabel="samples/s"),
+        f"<h2>Audit log — last {len(audit_tail)} of {hub.audit.total} "
+        f"decisions{dropped}</h2>",
+        "<table><tr><th>t</th><th>kind</th><th>job</th><th>dev</th>"
+        f"<th>details</th></tr>{audit_rows}</table>",
+        "</body></html>",
+    ]
+    text = "\n".join(parts)
+    if path is not None:
+        with open(path, "w") as f:
+            f.write(text)
+    return text

@@ -64,7 +64,8 @@ class ServingConfig:
 
 class ServingEngine:
     def __init__(self, model: TransformerLM, params, scfg: ServingConfig,
-                 best_effort_hook: Optional[Callable[[], None]] = None):
+                 best_effort_hook: Optional[Callable[[], None]] = None,
+                 obs: Any = None):
         self.model = model
         self.params = params
         self.scfg = scfg
@@ -73,6 +74,11 @@ class ServingEngine:
         self.done: List[Request] = []
         self.be_hook = best_effort_hook
         self.be_quanta = 0
+        # optional telemetry (repro.obs.ObsHub or a ServingProbe);
+        # observation-only and opt-in, same contract as the simulator
+        if obs is not None and hasattr(obs, "serving"):
+            obs = obs.serving()
+        self.obs = obs
         cap, T = scfg.capacity, scfg.max_len
         self._lengths = np.zeros(cap, np.int32)        # tokens in cache
         self._active = np.zeros(cap, bool)
@@ -134,6 +140,8 @@ class ServingEngine:
         first = int(jnp.argmax(logits[0, -1]))
         req.tokens.append(first)
         req.first_token_t = time.monotonic()
+        if self.obs is not None:
+            self.obs.admitted(req.ttft)
         self._slot_req[slot] = req
         self._lengths[slot] = len(req.prompt)
         self._next_tok[slot] = first
@@ -144,6 +152,8 @@ class ServingEngine:
         req = self._slot_req[slot]
         assert req is not None
         req.done_t = time.monotonic()
+        if self.obs is not None:
+            self.obs.retired(req.latency)
         self.done.append(req)
         self._slot_req[slot] = None
         self._active[slot] = False
@@ -163,6 +173,8 @@ class ServingEngine:
                 # engine level): only when the HP engine is fully idle
                 self.be_hook()
                 self.be_quanta += 1
+                if self.obs is not None:
+                    self.obs.be_quantum()
                 return True
             return False
         tokens = jnp.asarray(self._next_tok[:, None])
@@ -181,6 +193,8 @@ class ServingEngine:
             if (len(req.tokens) >= req.max_new_tokens or hit_eos
                     or out_of_room):
                 self._retire(slot)
+        if self.obs is not None:
+            self.obs.slots(float(self._active.sum()))
         return True
 
     def run_until_idle(self, max_steps: int = 10_000) -> None:

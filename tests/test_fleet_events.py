@@ -131,6 +131,61 @@ def test_equivalence_device_failure_requeues_be():
     assert fp["services"]["svc"][7] == pytest.approx(6.0)   # active_span
 
 
+def test_telemetry_identical_across_cores_and_reconstructs_migrations():
+    """With an ``ObsHub`` attached, both fleet cores must produce
+    byte-identical telemetry — audit log, metric registry, JSONL dumps —
+    without perturbing the simulated outcome, and the audit log must
+    reconstruct every migration with the SLO inputs that triggered it."""
+    from repro.obs import ObsHub, prometheus_text, to_jsonl
+
+    def jobs():
+        hp = paper_workload("bert-infer", 0)
+        be = paper_workload("whisper-train", 1)
+        return [hp_service("svc", hp, load=0.6, seed=2, slo_factor=1.02),
+                be_job("noisy", be)]
+
+    kw = dict(horizon=16.0, check_interval=2.0, min_window=10)
+    bare = _fingerprint(
+        FleetSimulator(2, "first_fit", **kw).run(jobs()))
+    fps, hubs = [], []
+    for event_driven in (True, False):
+        hub = ObsHub()
+        fleet = FleetSimulator(2, "first_fit", event_driven=event_driven,
+                               obs=hub, **kw)
+        fps.append(_fingerprint(fleet.run(jobs())))
+        hubs.append(hub)
+
+    # observation-only: telemetry does not change the simulation
+    _assert_same(fps[0], bare)
+    _assert_same(fps[0], fps[1])
+    # bit-exact across cores, byte-for-byte through every exposition
+    assert hubs[0].audit.fingerprint() == hubs[1].audit.fingerprint()
+    assert hubs[0].audit.to_jsonl() == hubs[1].audit.to_jsonl()
+    assert prometheus_text(hubs[0].registry) == \
+        prometheus_text(hubs[1].registry)
+    assert to_jsonl(hubs[0].registry) == to_jsonl(hubs[1].registry)
+
+    # the fixture migrates; "why was noisy moved at t?" is answerable
+    assert fps[0]["migrations"]
+    audit = hubs[0].audit
+    assert audit.filter(kind="slo_check"), "SLO evaluations must be logged"
+    for t, job, src, dst in fps[0]["migrations"]:
+        recs = [r for r in audit.why(job, t) if r.kind == "migration"]
+        assert len(recs) == 1
+        r = recs[0]
+        assert r.device == src and r.details["dst"] == dst
+        assert r.details["window_p99"] > r.details["bound"]
+        assert r.details["window"] >= 10
+        assert job in r.details["disruption"]
+    # fleet counters agree with the result
+    reg = hubs[0].registry
+    assert reg.get("tally_migrations_total").child().value == \
+        len(fps[0]["migrations"])
+    assert reg.get("tally_placements_total").child("hp_service").value + \
+        reg.get("tally_placements_total").child("be_train").value == \
+        len(fps[0]["placements"])
+
+
 def test_failed_device_excluded_from_placement():
     be = paper_workload("gpt2-train", 1)
     fleet = FleetSimulator(2, "first_fit", horizon=10.0, check_interval=2.0,
