@@ -1,0 +1,169 @@
+"""CI chaos smoke: the resilience layer's standing contracts, end to end.
+
+One seeded chaos scenario — transient stalls, a correlated rack failure,
+a preemption storm, and an overload burst of best-effort submissions —
+runs on a 8-GPU fleet with recovery + shedding policies, gang scheduling,
+and full telemetry, and the script asserts the three invariants the
+resilience layer guarantees:
+
+  1. **Cross-core determinism**: the lockstep and event-driven fleet
+     cores produce byte-identical results AND byte-identical audit logs
+     (every stall/recover/requeue/quarantine/shed decision included).
+  2. **Snapshot round-trip**: a mid-run ``FleetSnapshot`` resumed to the
+     horizon equals the uninterrupted run bit for bit.
+  3. **Auditability**: every fault the plan injected and every shed job
+     in the result is reconstructable from the audit log alone.
+
+Writes a recovery-annotated HTML dashboard (stall bands, recovery and
+quarantine markers, resilience summary) as the CI artifact. Exit 0 on
+success, 1 with a diff summary otherwise.
+
+    PYTHONPATH=src python -m benchmarks.chaos_smoke
+    PYTHONPATH=src python -m benchmarks.chaos_smoke --dashboard chaos.html
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+N_DEVICES = 8
+HORIZON = 40.0
+SEED = 13
+
+
+def scenario():
+    from repro.core.workloads import cluster_workload
+    from repro.resilience import chaos_plan
+
+    cw = cluster_workload(
+        N_DEVICES, duration=HORIZON, seed=SEED, jobs_per_device=1.5,
+        hp_fraction=0.5, hp_load=0.5, gang_fraction=0.3, max_gang=3,
+        resident_fraction=0.5, be_duration_frac=0.0,
+        burst_jobs=8, burst_time=0.45 * HORIZON)
+    plan = chaos_plan(N_DEVICES, HORIZON, seed=SEED, stalls=5,
+                      stall_duration=2.0, rack_size=4, rack_failures=1,
+                      stragglers=1, storms=1)
+    return cw, plan
+
+
+def run(event_driven: bool, snapshot_every=None):
+    from repro.core.fleet import FleetSimulator
+    from repro.obs import ObsHub
+    from repro.resilience import RecoveryPolicy, SheddingPolicy
+
+    cw, plan = scenario()
+    hub = ObsHub()
+    sim = FleetSimulator(
+        N_DEVICES, "least_loaded", horizon=HORIZON, check_interval=4.0,
+        max_be_per_device=2, event_driven=event_driven, obs=hub,
+        faults=plan.events,
+        recovery=RecoveryPolicy(backoff_base=0.4, backoff_factor=2.0,
+                                backoff_max=8.0, jitter=0.25,
+                                checkpoint_interval=3.0,
+                                breaker_threshold=3, breaker_cooldown=10.0),
+        shedding=SheddingPolicy(max_requeues=4, max_queue_delay=12.0,
+                                pressure_evict=True),
+        gangs=list(cw.gangs.values()),
+        snapshot_every=snapshot_every)
+    result = sim.run(cw.jobs)
+    return sim, result, hub, plan
+
+
+def result_fp(result) -> str:
+    d = result.to_json()
+    d.pop("self_profile", None)
+    return json.dumps(d, sort_keys=True)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dashboard", default=None, metavar="PATH",
+                    help="write the recovery-annotated HTML dashboard")
+    args = ap.parse_args(argv)
+
+    failures = []
+    t0 = time.perf_counter()
+    sim_e, res_e, hub_e, plan = run(event_driven=True, snapshot_every=12.0)
+    sim_l, res_l, hub_l, _ = run(event_driven=False)
+    wall = time.perf_counter() - t0
+
+    # 1. cross-core determinism, results + audit byte-for-byte
+    if result_fp(res_e) != result_fp(res_l):
+        failures.append("event-driven and lockstep results differ")
+    fp_e, fp_l = hub_e.audit.fingerprint(), hub_l.audit.fingerprint()
+    if fp_e != fp_l:
+        failures.append(
+            f"audit logs differ ({len(fp_e)} vs {len(fp_l)} records)")
+        for a, b in zip(fp_e, fp_l):
+            if a != b:
+                failures.append(f"  first divergence: {a} != {b}")
+                break
+
+    # 2. mid-run snapshot resumes bit-exactly
+    if not sim_e.snapshots:
+        failures.append("no snapshots taken despite snapshot_every")
+    else:
+        resumed = sim_e.snapshots[0].fork().resume()
+        if result_fp(resumed) != result_fp(res_e):
+            failures.append(
+                f"snapshot at t={sim_e.snapshots[0].taken_at:g} resumed "
+                f"to a different result than the uninterrupted run")
+
+    # 3. every applied fault and shed decision is reconstructable from
+    # the audit log (faults landing on an already-failed device are
+    # intentionally skipped, so the resilience counters — not the raw
+    # plan — are the ground truth the audit must match)
+    audited_kinds = {r.kind for r in hub_e.audit}
+    r = res_e.resilience or {}
+    n_stall_records = len(hub_e.audit.filter(kind="stall"))
+    if n_stall_records != r.get("stalls"):
+        failures.append(f"{r.get('stalls'):g} stalls applied but "
+                        f"{n_stall_records} audited")
+    plan_devs = {(type(e).__name__, e.device) for e in plan.events}
+    for kind, cls in (("stall", "DeviceStall"), ("failure",
+                                                 "DeviceFailure")):
+        for rec in hub_e.audit.filter(kind=kind):
+            if (cls, rec.device) not in plan_devs:
+                failures.append(f"audited {kind} on d{rec.device} has no "
+                                f"matching plan event")
+    shed_audited = {rec.job for rec in hub_e.audit.filter(kind="shed")}
+    if set(res_e.shed) != shed_audited:
+        failures.append(f"shed jobs {sorted(res_e.shed)} not fully "
+                        f"audited ({sorted(shed_audited)})")
+    for needed in ("stall", "recover", "requeue", "shed", "quarantine",
+                   "be_preempt", "failure"):
+        if needed not in audited_kinds:
+            failures.append(f"scenario never exercised audit kind "
+                            f"{needed!r} — tune the chaos plan")
+
+    r = res_e.resilience or {}
+    print(f"== chaos_smoke: {N_DEVICES} devices, {HORIZON:g}s, "
+          f"{len(plan)} fault events, {wall:.1f}s wall ==")
+    print(f"  audit records: {len(hub_e.audit)} "
+          f"(kinds: {', '.join(sorted(audited_kinds))})")
+    print("  " + ", ".join(f"{k}={v:g}" for k, v in r.items()))
+    print(f"  shed: {sorted(res_e.shed)}")
+    print(f"  snapshots: {len(sim_e.snapshots)} "
+          f"at {[s.taken_at for s in sim_e.snapshots]}")
+
+    if args.dashboard:
+        from repro.obs import render_dashboard
+        render_dashboard(res_e, hub_e, path=args.dashboard,
+                         title=f"chaos smoke — {N_DEVICES} devices, "
+                               f"{len(plan)} faults, seed {SEED}")
+        print(f"  wrote {args.dashboard}")
+
+    if failures:
+        print(f"\nCHAOS SMOKE FAILED ({len(failures)}):")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("\nchaos smoke passed: cores byte-identical, snapshot resume "
+          "bit-exact, all decisions audited")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -35,6 +35,27 @@ from typing import Dict, List, Optional, Tuple
 RESET_TAG = "[bench-reset]"
 
 
+class LedgerError(RuntimeError):
+    """A committed BENCH_*.json that cannot be used as a baseline."""
+
+
+def _load_ledger(path: Path) -> dict:
+    try:
+        text = path.read_text()
+    except OSError as e:
+        raise LedgerError(f"cannot read committed ledger {path}: {e}") from e
+    try:
+        d = json.loads(text)
+    except json.JSONDecodeError as e:
+        raise LedgerError(
+            f"corrupt JSON in committed ledger {path} (line {e.lineno}, "
+            f"column {e.colno}): {e.msg} — regenerate it with the "
+            f"matching bench module and commit the result") from e
+    if not isinstance(d, dict):
+        raise LedgerError(f"committed ledger {path} is not a JSON object")
+    return d
+
+
 def commit_message(explicit: Optional[str]) -> str:
     if explicit is not None:
         return explicit
@@ -53,10 +74,22 @@ def commit_message(explicit: Optional[str]) -> str:
 # -- metric extraction --------------------------------------------------------
 
 
-def perf_rates(d: dict) -> Dict[str, float]:
+def _tier_missing(ledger: str, tier: str) -> None:
+    """A ledger written by an older/newer bench schema can lack whole
+    tiers; the gate degrades to comparing what both sides have instead
+    of crashing (metrics on one side only never fail — see compare)."""
+    print(f"warning: {ledger} has no {tier!r} tier — skipped",
+          file=sys.stderr)
+
+
+def perf_rates(d: dict, ledger: str = "perf result") -> Dict[str, float]:
     """Higher-is-better rates from a BENCH_perf result (any tier)."""
-    out = {"single_device events/s (fast)":
-           d["single_device"]["events_per_s_fast"]}
+    out: Dict[str, float] = {}
+    sd = d.get("single_device")
+    if sd is None:
+        _tier_missing(ledger, "single_device")
+    else:
+        out["single_device events/s (fast)"] = sd["events_per_s_fast"]
     for p in d.get("cluster_sweep", {}).get("points", ()):
         key = (f"cluster {p['n_devices']}dev/"
                f"{p['horizon_s']:g}s completions/s")
@@ -64,13 +97,15 @@ def perf_rates(d: dict) -> Dict[str, float]:
     return out
 
 
-def perf_exact(d: dict) -> Dict[str, float]:
+def perf_exact(d: dict, ledger: str = "perf result") -> Dict[str, float]:
     """Deterministic simulated outcomes from a BENCH_perf result."""
     # keyed by duration: exact counts only compare between runs of the
     # identical configuration (the rate metric above is tier-agnostic)
-    sd = d["single_device"]
-    out = {f"single_device {sd['duration_s']:g}s simulated kernels":
-           sd["simulated_kernels"]}
+    out: Dict[str, float] = {}
+    sd = d.get("single_device")
+    if sd is not None:
+        out[f"single_device {sd['duration_s']:g}s simulated kernels"] = \
+            sd["simulated_kernels"]
     for p in d.get("cluster_sweep", {}).get("points", ()):
         key = (f"cluster {p['n_devices']}dev/"
                f"{p['horizon_s']:g}s kernel completions")
@@ -78,16 +113,22 @@ def perf_exact(d: dict) -> Dict[str, float]:
     return out
 
 
-def trace_rates(d: dict) -> Dict[str, float]:
-    rt = d["round_trip"]
+def trace_rates(d: dict, ledger: str = "trace result") -> Dict[str, float]:
+    rt = d.get("round_trip")
+    if rt is None:
+        _tier_missing(ledger, "round_trip")
+        return {}
     ev = rt["events"]
     return {f"trace {stage} events/s": ev / rt[f"wall_s_{stage}"]
             for stage in ("recorded", "export", "ingest", "replay")
             if rt.get(f"wall_s_{stage}")}
 
 
-def trace_exact(d: dict) -> Dict[str, float]:
-    return {"trace round-trip events": d["round_trip"]["events"]}
+def trace_exact(d: dict, ledger: str = "trace result") -> Dict[str, float]:
+    rt = d.get("round_trip")
+    if rt is None:
+        return {}
+    return {"trace round-trip events": rt["events"]}
 
 
 def obs_overhead_failures(fresh: dict,
@@ -172,8 +213,12 @@ def main(argv=None) -> int:
         return 0
 
     results = Path(args.results_dir)
-    base_perf = json.loads((results / "BENCH_perf.json").read_text())
-    base_trace = json.loads((results / "BENCH_trace.json").read_text())
+    try:
+        base_perf = _load_ledger(results / "BENCH_perf.json")
+        base_trace = _load_ledger(results / "BENCH_trace.json")
+    except LedgerError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
 
     from benchmarks import perf_bench, trace_bench
 
@@ -186,9 +231,11 @@ def main(argv=None) -> int:
 
     failures, lines = compare(
         {**perf_rates(fresh_perf), **trace_rates(fresh_trace)},
-        {**perf_rates(base_perf), **trace_rates(base_trace)},
+        {**perf_rates(base_perf, "BENCH_perf.json"),
+         **trace_rates(base_trace, "BENCH_trace.json")},
         {**perf_exact(fresh_perf), **trace_exact(fresh_trace)},
-        {**perf_exact(base_perf), **trace_exact(base_trace)},
+        {**perf_exact(base_perf, "BENCH_perf.json"),
+         **trace_exact(base_trace, "BENCH_trace.json")},
         args.threshold)
     obs_failures = obs_overhead_failures(fresh_perf)
     failures += obs_failures

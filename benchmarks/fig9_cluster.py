@@ -69,15 +69,27 @@ def kernel_completions(result, workloads) -> float:
     return total
 
 
+def _result_fp(result) -> str:
+    """Canonical simulated-outcome fingerprint (wall-clock self-profile
+    excluded — it is the one legitimately non-deterministic field)."""
+    d = result.to_json()
+    d.pop("self_profile", None)
+    return json.dumps(d, sort_keys=True)
+
+
 def run_scale(n_devices: int, *, duration: float = 60.0,
               seed: int = 0, obs=None, result_out: list = None,
+              snapshot_every: float = None,
               **scenario) -> Dict[str, float]:
     """One sweep point: generate the scenario, run the event-driven
     fleet, report wall time + simulated-kernel throughput. ``obs`` takes
     a ``repro.obs.ObsHub`` (telemetry is bit-exact, so the reported
     numbers are unchanged — only the wall time pays the hook cost);
     ``result_out`` receives the ``FleetResult`` when given (dashboard
-    rendering needs the full object, not just the row)."""
+    rendering needs the full object, not just the row).
+    ``snapshot_every`` checkpoints the simulator mid-run and verifies
+    that resuming the first snapshot reproduces the uninterrupted result
+    bit-exactly (``resume_bitexact`` in the row)."""
     from repro.core.fleet import FleetSimulator
     from repro.core.workloads import cluster_workload
 
@@ -86,7 +98,7 @@ def run_scale(n_devices: int, *, duration: float = 60.0,
     workloads = {j.name: j.workload for j in cw.jobs}
     fleet = FleetSimulator(n_devices, "first_fit", horizon=duration,
                            check_interval=5.0, failures=cw.failures,
-                           obs=obs)
+                           obs=obs, snapshot_every=snapshot_every)
     t0 = time.perf_counter()
     result = fleet.run(cw.jobs)
     wall = time.perf_counter() - t0
@@ -94,7 +106,7 @@ def run_scale(n_devices: int, *, duration: float = 60.0,
     if result_out is not None:
         result_out.append(result)
     s = result.summary()
-    return {
+    row = {
         "n_devices": n_devices,
         "n_jobs": len(cw.jobs),
         "n_failures": len(cw.failures),
@@ -107,13 +119,46 @@ def run_scale(n_devices: int, *, duration: float = 60.0,
         "migrations": int(s["migrations"]),
         "requests_done": int(s["requests_done"]),
     }
+    if snapshot_every is not None and fleet.snapshots:
+        resumed = fleet.snapshots[0].fork().resume()
+        row["snapshots"] = len(fleet.snapshots)
+        row["resume_bitexact"] = _result_fp(resumed) == _result_fp(result)
+    return row
 
 
 def cluster_sweep(sizes: Iterable[int], *, duration: float = 60.0,
-                  seed: int = 0) -> Dict[str, object]:
+                  seed: int = 0, snapshot_every: float = None,
+                  state_path: str = None,
+                  resume: bool = False) -> Dict[str, object]:
+    """Sweep ``sizes``; with ``state_path`` the sweep is crash-resumable
+    at point granularity — each completed point is committed atomically
+    (``repro.resilience.save_sweep_state``), and ``resume=True`` skips
+    points the state file already holds (rejecting a state produced with
+    different sweep settings)."""
+    sizes = list(sizes)
+    state = None
+    if state_path is not None:
+        from repro.resilience import SweepState, load_sweep_state, \
+            save_sweep_state
+        meta = {"sizes": sizes, "duration": duration, "seed": seed,
+                "snapshot_every": snapshot_every}
+        if resume:
+            state = load_sweep_state(state_path, meta)
+        if state is None:
+            state = SweepState(meta=meta)
     rows: List[Dict[str, float]] = []
     for n in sizes:
-        rows.append(run_scale(n, duration=duration, seed=seed, **SCENARIO))
+        if state is not None and state.done(n):
+            print(f"resume: {n}-device point already in {state_path}, "
+                  f"skipped")
+            rows.append(state.points[str(n)])
+            continue
+        row = run_scale(n, duration=duration, seed=seed,
+                        snapshot_every=snapshot_every, **SCENARIO)
+        rows.append(row)
+        if state is not None:
+            state.record(n, row)
+            save_sweep_state(state_path, state)
     peak = max((r["completions_per_s"] for r in rows), default=0.0)
     return {
         "scenario": dict(SCENARIO, duration=duration, seed=seed),
@@ -132,11 +177,28 @@ def main(argv=None) -> dict:
                          "telemetry and write a self-contained HTML "
                          "dashboard (+ the full FleetResult as JSON "
                          "next to it)")
+    ap.add_argument("--snapshot-every", type=float, default=None,
+                    metavar="S", help="checkpoint each fleet run every S "
+                    "simulated seconds and verify a mid-run snapshot "
+                    "resumes bit-exactly (resume_bitexact per point)")
+    ap.add_argument("--resume", action="store_true",
+                    help="skip sweep points already committed to the "
+                         "state file (<output>.state) from a prior run")
     args = ap.parse_args(argv)
 
     sizes = QUICK_SIZES if args.quick else FULL_SIZES
     duration = QUICK_DURATION if args.quick else FULL_DURATION
-    sweep = cluster_sweep(sizes, duration=duration)
+    state_path = (args.output + ".state"
+                  if args.resume or args.snapshot_every is not None
+                  else None)
+    sweep = cluster_sweep(sizes, duration=duration,
+                          snapshot_every=args.snapshot_every,
+                          state_path=state_path, resume=args.resume)
+    bad = [r["n_devices"] for r in sweep["points"]
+           if r.get("resume_bitexact") is False]
+    if bad:
+        raise SystemExit(f"snapshot resume drifted from the uninterrupted "
+                         f"run at {bad}-device points")
 
     if args.dashboard:
         from repro.obs import ObsHub, render_dashboard

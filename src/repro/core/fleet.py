@@ -62,6 +62,7 @@ Fleet-level aggregates:
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 import heapq
 import json
@@ -138,6 +139,48 @@ class DeviceFailure:
     device: int
 
 
+@dataclass(frozen=True)
+class DeviceStall:
+    """A transient outage: at ``time`` the device goes dark for
+    ``duration`` seconds. Resident BE jobs re-enter the admission queue
+    carrying watermarked progress (re-admission delayed by the recovery
+    policy's backoff when one is set); the HP service stays attached but
+    frozen — its engine clock jumps over the outage, so requests arriving
+    meanwhile are served back-to-back at recovery and the stall surfaces
+    as a latency spike the SLO machinery reacts to. The device is
+    excluded from placement until ``time + duration``, then rejoins the
+    pool (``repro.resilience.chaos_plan`` generates correlated streams of
+    these)."""
+
+    time: float
+    device: int
+    duration: float
+
+    def __post_init__(self) -> None:
+        if not self.duration > 0.0:
+            raise ValueError("DeviceStall.duration must be positive")
+
+
+@dataclass(frozen=True)
+class BEPreemption:
+    """A cluster-level preemption at ``time``: every BE job resident on
+    ``device`` is evicted back to the admission queue carrying its
+    progress (a *preemption storm* is many of these at one instant). The
+    device itself stays healthy — only its best-effort tenants are
+    bumped."""
+
+    time: float
+    device: int
+
+
+FaultEvent = Union[DeviceFailure, DeviceStall, BEPreemption]
+
+# canonical intra-point ordering of fault actions: recoveries first (a
+# device that recovers and refails at one instant ends the point failed),
+# then failures, stalls, preemptions; ties break on device index
+_ACTION_ORDER = {"recover": 0, "fail": 1, "stall": 2, "preempt": 3}
+
+
 # ---------------------------------------------------------------------------
 # Per-device fleet state
 # ---------------------------------------------------------------------------
@@ -174,6 +217,10 @@ class ManagedDevice:
         self.iso: Optional[_IsoRef] = None
         self.failed = False
         self.failed_at = float("nan")
+        # resilience state (inert unless faults / a recovery policy run)
+        self.stalled_until = -math.inf   # excluded from placement until then
+        self.quarantined_until = -math.inf  # circuit breaker exclusion
+        self.fault_count = 0             # stalls survived (breaker input)
         # event-core bookkeeping (inert on the lockstep path)
         self._synced = -1.0      # last decision point this engine reached
         self._act_time = 0.0     # tag of the live fleet-queue entry
@@ -183,6 +230,11 @@ class ManagedDevice:
     @property
     def dev(self) -> DeviceModel:
         return self.engine.dev
+
+    def available(self, now: float) -> bool:
+        """Placement-eligible: alive, not mid-stall, not quarantined."""
+        return (not self.failed and now >= self.stalled_until
+                and now >= self.quarantined_until)
 
     def occupancy(self, now: float, warmup: float) -> float:
         """HP busy fraction: measured (since attach) once the service has
@@ -307,6 +359,11 @@ class FleetResult:
     placements: List[Tuple[float, str, int]] = field(default_factory=list)
     devices: List[DeviceReport] = field(default_factory=list)
     self_profile: Optional[Dict[str, float]] = None   # wall clock, obs runs
+    # populated only when the resilience layer ran (faults / recovery /
+    # shedding); None keeps fault-free summaries and JSON byte-identical
+    # to pre-resilience runs
+    shed: List[str] = field(default_factory=list)
+    resilience: Optional[Dict[str, float]] = None
 
     @property
     def cluster_goodput(self) -> float:
@@ -343,6 +400,9 @@ class FleetResult:
             "requests_done": float(sum(d.requests_done for d in self.devices)),
             "failed_devices": float(sum(1 for d in self.devices if d.failed)),
         }
+        if self.resilience is not None:
+            for k, v in self.resilience.items():
+                out[f"resilience/{k}"] = v
         for name, s in self.services.items():
             out[f"p99_ms/{name}"] = s.p99 * 1e3
             out[f"slo_attainment/{name}"] = s.slo_attainment
@@ -373,6 +433,9 @@ class FleetResult:
             "placements": [list(p) for p in self.placements],
             "unplaced": list(self.unplaced),
         }
+        if self.resilience is not None:
+            out["shed"] = list(self.shed)
+            out["resilience"] = dict(self.resilience)
         if self.self_profile is not None:
             out["self_profile"] = self.self_profile
         if path is not None:
@@ -420,16 +483,65 @@ class FleetSimulator:
                  threshold: float = 0.0316e-3, max_be_per_device: int = 4,
                  min_window: int = 20, fast: bool = True, recorder=None,
                  obs=None, event_driven: bool = True,
-                 failures: Optional[List[DeviceFailure]] = None):
+                 failures: Optional[List[DeviceFailure]] = None,
+                 faults: Optional[List[FaultEvent]] = None,
+                 recovery=None, shedding=None,
+                 gangs: Optional[List[List[str]]] = None,
+                 snapshot_every: Optional[float] = None):
         if device_models is not None and len(device_models) != n_devices:
             raise ValueError("device_models length must equal n_devices")
         self.event_driven = event_driven
-        self.failures = sorted(failures or [],
-                               key=lambda f: (f.time, f.device))
-        for f in self.failures:
+        # ``failures`` keeps the PR-6 API (one-shot node losses);
+        # ``faults`` is the generalized stream (failures, transient
+        # stalls, BE preemptions — see repro.resilience). Both merge into
+        # one action list applied identically by the two cores.
+        events: List[FaultEvent] = list(failures or []) + list(faults or [])
+        for f in events:
             if not 0 <= f.device < n_devices:
-                raise ValueError(f"failure device {f.device} out of range "
+                raise ValueError(f"fault device {f.device} out of range "
                                  f"for a {n_devices}-device fleet")
+        self.failures = sorted((f for f in events
+                                if isinstance(f, DeviceFailure)),
+                               key=lambda f: (f.time, f.device))
+        actions: List[Tuple[float, int, int, str, float]] = []
+        for f in events:
+            if isinstance(f, DeviceFailure):
+                actions.append((f.time, _ACTION_ORDER["fail"], f.device,
+                                "fail", 0.0))
+            elif isinstance(f, DeviceStall):
+                actions.append((f.time, _ACTION_ORDER["stall"], f.device,
+                                "stall", f.duration))
+                actions.append((f.time + f.duration,
+                                _ACTION_ORDER["recover"], f.device,
+                                "recover", 0.0))
+            elif isinstance(f, BEPreemption):
+                actions.append((f.time, _ACTION_ORDER["preempt"], f.device,
+                                "preempt", 0.0))
+            else:
+                raise TypeError(f"unknown fault event {f!r}")
+        self._actions = sorted(actions)
+        # recovery / shedding policies are duck-typed (repro.resilience
+        # provides the reference implementations; core stays import-free)
+        self._recovery = recovery
+        self._shedding = shedding
+        self._gang_of: Dict[str, str] = {}
+        self._gang_members: Dict[str, List[str]] = {}
+        for group in gangs or []:
+            members = sorted(group)
+            if len(members) < 2:
+                continue
+            gid = members[0]
+            self._gang_members[gid] = members
+            for m in members:
+                if m in self._gang_of:
+                    raise ValueError(f"job {m!r} appears in two gangs")
+                self._gang_of[m] = gid
+        self._resil_active = bool(faults) or recovery is not None \
+            or shedding is not None or bool(self._gang_of)
+        if snapshot_every is not None and not snapshot_every > 0.0:
+            raise ValueError("snapshot_every must be positive")
+        self.snapshot_every = snapshot_every
+        self.snapshots: List["FleetSnapshot"] = []
         models = device_models or [dev] * n_devices
         if isinstance(policy, str):
             # the interference-aware policy must score with the same
@@ -475,6 +587,22 @@ class FleetSimulator:
                                    None) or TurnaroundEstimator(threshold)
         self._ran = False
         self._evt: Optional[_EventState] = None
+        # resilience bookkeeping, identical in both cores (all of it
+        # inert — empty dicts, zero counters — when no faults/policies run)
+        self._act_i = 0                      # cursor into _actions
+        self._eligible: Dict[str, float] = {}   # job -> backoff gate opens
+        self._enqueued: Dict[str, float] = {}   # job -> admissible since
+        self._attempts: Dict[str, int] = {}     # job -> requeue count
+        self._quar_exp: Dict[int, float] = {}   # device -> quarantine ends
+        self._be_where: Dict[str, int] = {}     # resident BE job -> device
+        self._shed_list: List[str] = []
+        self._lost_work = 0.0
+        self._n_faults = 0
+        self._n_stalls = 0
+        self._n_recoveries = 0
+        self._n_requeues = 0
+        self._n_pressure = 0
+        self._n_gang_restarts = 0
 
     # -- event-core plumbing ---------------------------------------------------
 
@@ -538,7 +666,7 @@ class FleetSimulator:
                     self._sync(d, now)
         views = []
         for d in self.devices:
-            if d.index == exclude or d.failed:
+            if d.index == exclude or not d.available(now):
                 continue
             views.append(DeviceView(
                 index=d.index, dev=d.dev, has_hp=d.hp_job is not None,
@@ -664,7 +792,9 @@ class FleetSimulator:
                                    (now + job.duration, job.name))
             if self._evt is not None:
                 self._evt.job_device[job.name] = idx
+            self._be_where[job.name] = idx
         self._placements.append((now, job.name, idx))
+        self._enqueued.pop(job.name, None)
         self._rev += 1
         if self.obs is not None:
             self.obs.placement(now, job.name, job.kind, idx,
@@ -729,6 +859,23 @@ class FleetSimulator:
                 self.obs.migration_blocked(now, victim, d.index,
                                            d.hp_job.name, est, bound,
                                            wcount)
+            shed = self._shedding
+            if shed is not None and shed.pressure_evict:
+                # graceful degradation: no destination exists, so park
+                # the most disruptive BE job back in the admission queue
+                # (bounded by max_requeues) instead of letting the HP
+                # service keep breaching its SLO
+                if self.obs is not None:
+                    self.obs.be_preempt(now, d.index, [victim],
+                                        "slo_pressure")
+                self._requeue_one(d, victim, now, "slo_pressure")
+                if not d.be_jobs:
+                    d._deactivated_at = now
+                self._n_pressure += 1
+                self._rev += 1
+                if self._evt is not None:
+                    self._evt.rev += 1
+                    self._schedule(d)
             return False           # nowhere to go: stay (next check retries)
         dst = self.devices[idx]
         activate = (self._evt is not None and dst.hp_job is not None
@@ -754,6 +901,7 @@ class FleetSimulator:
         dst.engine.attach_be(client=client)
         dst.be_jobs[victim] = job
         dst.be_placed_at[victim] = placed_at
+        self._be_where[victim] = idx
         self.migrations.append(Migration(now, victim, d.index, idx))
         self._rev += 1
         if self.obs is not None:
@@ -796,36 +944,282 @@ class FleetSimulator:
                         j += 1
                     work.insert(j, dst)
 
-    def _fail_devices(self, now: float) -> None:
-        """Apply node failures due by ``now`` (both cores, identical
-        order: failure time, then device index)."""
-        while (self._fail_i < len(self.failures)
-               and self.failures[self._fail_i].time <= now):
-            f = self.failures[self._fail_i]
-            self._fail_i += 1
-            d = self.devices[f.device]
-            if d.failed:
-                continue
-            self._sync(d, now)     # event core; lockstep already advanced
-            d.failed = True
-            d.failed_at = now
-            requeued = []
-            for name in list(d.be_jobs):
-                client = d.engine.detach_be(name)
-                job = d.be_jobs.pop(name)
-                d.be_placed_at.pop(name, None)
-                self._failover[name] = client
-                self._pending.append(job)
-                requeued.append(name)
+    # -- fault injection / recovery (repro.resilience) -------------------------
+
+    def _apply_faults(self, now: float) -> None:
+        """Apply fault-plan actions due by ``now``, then dynamic expiries
+        (quarantine cooldowns, backoff gates). Runs at every decision
+        point in both cores; every feasibility change bumps the placement
+        revision at the same logical spot in both, which is what keeps
+        the event core's admission gating (and therefore the audit log)
+        bit-exact under arbitrary fault plans."""
+        while (self._act_i < len(self._actions)
+               and self._actions[self._act_i][0] <= now):
+            _, _, devi, kind, dur = self._actions[self._act_i]
+            self._act_i += 1
+            if kind == "fail":
+                self._fault_fail(now, devi)
+            elif kind == "stall":
+                self._fault_stall(now, devi, dur)
+            elif kind == "recover":
+                self._fault_recover(now, devi)
+            else:
+                self._fault_preempt(now, devi)
+        if self._quar_exp:
+            for i in sorted(i for i, te in self._quar_exp.items()
+                            if te <= now):
+                del self._quar_exp[i]
+                self._rev += 1      # device re-enters the placement pool
+                if self.obs is not None:
+                    self.obs.device_recover(now, i, "quarantine_expired")
                 if self._evt is not None:
-                    self._evt.job_device.pop(name, None)
-                    self._evt.pending_kinds[job.kind] += 1
-            self._rev += 1
+                    self._evt.rev += 1
+        if self._eligible:
+            for n in sorted(n for n, te in self._eligible.items()
+                            if te <= now):
+                del self._eligible[n]
+                self._rev += 1      # job becomes admissible: force a pass
+                if self._evt is not None:
+                    self._evt.rev += 1
+
+    def _fault_fail(self, now: float, devi: int) -> None:
+        """Node loss (the PR-6 ``DeviceFailure`` semantics, now routed
+        through the shared requeue path so recovery/shedding policies and
+        gang restarts apply to failures too)."""
+        d = self.devices[devi]
+        if d.failed:
+            return
+        self._sync(d, now)     # event core; lockstep already advanced
+        self._n_faults += 1
+        d.failed = True
+        d.failed_at = now
+        requeued = []
+        for name in list(d.be_jobs):
+            if self._requeue_one(d, name, now, "failure"):
+                requeued.append(name)
+        self._rev += 1
+        if self.obs is not None:
+            self.obs.device_failure(now, devi, requeued)
+        if self._evt is not None:
+            self._evt.rev += 1
+            d._act_time = math.inf   # stale out any queued entry
+        self._gang_restart(now, requeued)
+
+    def _fault_stall(self, now: float, devi: int, dur: float) -> None:
+        """Transient outage: evict resident BE jobs through the requeue
+        path, then jump the engine clock over the outage (the HP service
+        stays attached; everything queued meanwhile is served
+        back-to-back at recovery — see ``DeviceEngine.stall_until``)."""
+        d = self.devices[devi]
+        if d.failed:
+            return
+        self._sync(d, now)
+        d.stalled_until = max(d.stalled_until, now + dur)
+        d.fault_count += 1
+        requeued = []
+        for name in list(d.be_jobs):
+            if self._requeue_one(d, name, now, "stall"):
+                requeued.append(name)
+        # NOTE: ``_deactivated_at`` stays untouched — faults run *before*
+        # the SLO pass, so the lockstep core discards this (now hp-only)
+        # device's window at this very point; the event core must
+        # materialize that discard at the next BE attach, which the
+        # ``_deactivated_at == now`` guard would wrongly suppress.
+        d.engine.stall_until(d.stalled_until)
+        self._add_point(d.stalled_until)     # recovery is a decision point
+        self._n_faults += 1
+        self._n_stalls += 1
+        self._rev += 1
+        if self.obs is not None:
+            self.obs.device_stall(now, devi, d.stalled_until, requeued)
+        if self._evt is not None:
+            self._evt.rev += 1
+            self._schedule(d)
+        rec = self._recovery
+        if (rec is not None and rec.breaker_threshold is not None
+                and d.fault_count >= rec.breaker_threshold
+                and now >= d.quarantined_until):
+            # circuit breaker: a repeatedly-stalling device leaves the
+            # placement pool (forever, or for breaker_cooldown seconds
+            # past the end of this stall)
+            cd = rec.breaker_cooldown
+            until = (math.inf if cd is None or math.isinf(cd)
+                     else d.stalled_until + cd)
+            d.quarantined_until = until
+            if math.isfinite(until):
+                self._quar_exp[devi] = until
+                self._add_point(until)
             if self.obs is not None:
-                self.obs.device_failure(now, f.device, requeued)
-            if self._evt is not None:
-                self._evt.rev += 1
-                d._act_time = math.inf   # stale out any queued entry
+                self.obs.quarantine(now, devi, d.fault_count, until)
+        self._gang_restart(now, requeued)
+
+    def _fault_recover(self, now: float, devi: int) -> None:
+        """End of a transient stall: the device rejoins the pool."""
+        d = self.devices[devi]
+        if d.failed or now < d.stalled_until:
+            return    # failed mid-stall, or a later stall extended the outage
+        self._n_recoveries += 1
+        self._rev += 1          # placement feasibility just grew
+        if self.obs is not None:
+            self.obs.device_recover(now, devi, "stall_ended")
+        if self._evt is not None:
+            self._evt.rev += 1
+            self._schedule(d)
+
+    def _fault_preempt(self, now: float, devi: int) -> None:
+        """Cluster-level preemption: bump every resident BE job on the
+        device back into the admission queue (the device stays healthy)."""
+        d = self.devices[devi]
+        if d.failed or not d.be_jobs:
+            return
+        self._sync(d, now)
+        self._n_faults += 1
+        requeued = []
+        for name in list(d.be_jobs):
+            if self._requeue_one(d, name, now, "preempt"):
+                requeued.append(name)
+        # _deactivated_at untouched: see _fault_stall (faults precede the
+        # SLO pass, so the discard at this point must still materialize)
+        self._rev += 1
+        if self.obs is not None:
+            self.obs.be_preempt(now, devi, requeued, "storm")
+        if self._evt is not None:
+            self._evt.rev += 1
+            self._schedule(d)
+        self._gang_restart(now, requeued)
+
+    def _requeue_one(self, d: ManagedDevice, name: str, now: float,
+                     reason: str) -> bool:
+        """Detach one resident BE job on ``d`` back into the admission
+        queue — failures, stalls, preemption storms, gang restarts, and
+        SLO-pressure eviction all share this path (both cores). Applies
+        the recovery policy's checkpoint rollback + backoff gate and the
+        shedding policy's requeue bound; returns False when the job was
+        shed instead of requeued."""
+        client = d.engine.detach_be(name)
+        job = d.be_jobs.pop(name)
+        placed_at = d.be_placed_at.pop(name, now)
+        self._be_where.pop(name, None)
+        if self._evt is not None:
+            self._evt.job_device.pop(name, None)
+        attempt = self._attempts.get(name, 0) + 1
+        self._attempts[name] = attempt
+        shed = self._shedding
+        if (shed is not None and shed.max_requeues is not None
+                and attempt > shed.max_requeues):
+            self._shed_job(job, now, f"max_requeues:{reason}", d.index)
+            return False
+        rec = self._recovery
+        eligible_at = now
+        lost = 0.0
+        if rec is not None:
+            lost = rec.lost_work(placed_at, now)
+            self._lost_work += lost
+            if rec.checkpoint_interval is not None:
+                cur = getattr(client, "current", None)
+                if cur is not None:
+                    # checkpoint-aware restart: the in-flight kernel
+                    # resumes from its last checkpointed block watermark
+                    # (blocks since then are re-executed on re-admission)
+                    cur.watermark = 0
+            delay = rec.requeue_delay(name, attempt)
+            if delay > 0.0:
+                eligible_at = now + delay
+                self._eligible[name] = eligible_at
+                self._add_point(eligible_at)
+        self._failover[name] = client
+        self._pending.append(job)
+        self._note_enqueued(name, eligible_at)
+        if self._evt is not None:
+            self._evt.pending_kinds[job.kind] += 1
+        self._n_requeues += 1
+        if self.obs is not None and self._resil_active:
+            self.obs.requeue(now, name, d.index, reason, attempt,
+                             eligible_at, lost, self._gang_of.get(name))
+        return True
+
+    def _gang_restart(self, now: float, requeued: List[str]) -> None:
+        """Gang-aware re-scheduling: a fault bumping any gang member
+        requeues every resident member fleet-wide, and the whole gang
+        shares one re-admission gate (the max of its members' backoffs)
+        so it restarts together instead of trickling back."""
+        if not self._gang_of:
+            return
+        rec = self._recovery
+        if rec is not None and not rec.gang_restart:
+            return
+        gids = sorted({self._gang_of[n] for n in requeued
+                       if n in self._gang_of})
+        for gid in gids:
+            members = self._gang_members[gid]
+            for m in members:
+                idx = self._be_where.get(m)
+                if idx is None:
+                    continue       # not resident (pending, departed, shed)
+                od = self.devices[idx]
+                self._sync(od, now)
+                self._requeue_one(od, m, now, "gang")
+                # _deactivated_at untouched: gang restarts run from the
+                # fault handlers, before the SLO pass (see _fault_stall)
+                self._rev += 1
+                if self._evt is not None:
+                    self._evt.rev += 1
+                    self._schedule(od)
+            self._n_gang_restarts += 1
+            pend = {j.name for j in self._pending}
+            gate = max([now] + [self._eligible.get(m, now)
+                                for m in members if m in pend])
+            if gate > now:
+                for m in members:
+                    if m in pend:
+                        self._eligible[m] = gate
+                        self._note_enqueued(m, gate)
+                self._add_point(gate)
+
+    def _shed_job(self, job: JobSpec, now: float, reason: str,
+                  device: Optional[int] = None) -> None:
+        """Drop a job from the system entirely (requeue budget or queue
+        deadline exhausted): it never re-enters the admission queue."""
+        self._shed_list.append(job.name)
+        self._eligible.pop(job.name, None)
+        self._enqueued.pop(job.name, None)
+        self._failover.pop(job.name, None)
+        if self.obs is not None:
+            self.obs.shed(now, job.name, job.kind, reason, device)
+
+    def _note_enqueued(self, name: str, t: float) -> None:
+        """Start (or restart) a pending job's queue-delay deadline clock
+        at ``t`` — arrival, requeue eligibility, or gang gate."""
+        shed = self._shedding
+        if shed is not None and shed.max_queue_delay is not None:
+            self._enqueued[name] = t
+            self._add_point(t + shed.max_queue_delay)
+
+    def _shed_expired(self, t: float) -> None:
+        """Admission shedding: drop pending jobs whose queue-delay budget
+        expired (the clock runs while the job is admissible — backoff
+        windows and gang gates restart it). Runs in both cores just
+        before the admission pass; the pending deque's internal order is
+        core-specific, so sheds apply in canonical (arrival, name)
+        order."""
+        shed = self._shedding
+        if shed is None or shed.max_queue_delay is None or not self._pending:
+            return
+        limit = shed.max_queue_delay
+        expired = [j for j in self._pending
+                   if j.name not in self._eligible
+                   and t >= self._enqueued.get(j.name, math.inf) + limit]
+        if not expired:
+            return
+        evt = self._evt
+        for j in sorted(expired, key=lambda j: (j.arrival, j.name)):
+            self._shed_job(j, t, "queue_delay")
+            if evt is not None:
+                evt.pending_kinds[j.kind] -= 1
+        names = {j.name for j in expired}
+        keep = [j for j in self._pending if j.name not in names]
+        self._pending.clear()
+        self._pending.extend(keep)
 
     def _depart_finished(self, now: float) -> None:
         for d in self.devices:
@@ -836,6 +1230,7 @@ class FleetSimulator:
                 d.engine.detach_be(n)
                 del d.be_jobs[n]
                 self._departed[n] = d.index
+                self._be_where.pop(n, None)
                 self._rev += 1
                 if self.obs is not None:
                     self.obs.departure(now, n, d.index)
@@ -865,6 +1260,7 @@ class FleetSimulator:
                 d.engine.detach_be(n)
                 del d.be_jobs[n]
                 self._departed[n] = d.index
+                self._be_where.pop(n, None)
                 evt.job_device.pop(n, None)
                 evt.rev += 1
                 self._rev += 1
@@ -883,6 +1279,14 @@ class FleetSimulator:
                                "engines carry state); construct a new "
                                "FleetSimulator per run")
         self._ran = True
+        self._begin(jobs)
+        self._loop()
+        return self._finish()
+
+    def _begin(self, jobs: List[JobSpec]) -> None:
+        """Validate + register the job set and put *all* loop state on
+        ``self`` (cursors included), so a mid-run ``snapshot()`` deepcopy
+        captures everything ``_loop`` needs to continue afterwards."""
         names = [j.name for j in jobs]
         if len(set(names)) != len(names):
             raise ValueError("job names must be unique")
@@ -890,7 +1294,7 @@ class FleetSimulator:
             # register the full job set up front (submission order, so a
             # replayed fleet rebuilds an identical jobs table) and stamp
             # the fleet configuration a replay needs
-            self.recorder.meta.setdefault("fleet", {
+            meta = {
                 "n_devices": len(self.devices), "policy": self.policy.name,
                 "horizon": self.horizon,
                 "check_interval": self.check_interval,
@@ -899,7 +1303,14 @@ class FleetSimulator:
                 "event_driven": self.event_driven,
                 "failures": [[f.time, f.device] for f in self.failures],
                 "devices": [dataclasses.asdict(d.dev) for d in self.devices],
-            })
+            }
+            if any(a[3] != "fail" for a in self._actions):
+                # generalized fault plan (stalls / preemptions): stamp it
+                # for trace consumers (replay_fleet rebuilds failures only)
+                meta["faults"] = [[t, kind, dv, dur]
+                                  for t, _, dv, kind, dur in self._actions
+                                  if kind != "recover"]
+            self.recorder.meta.setdefault("fleet", meta)
             for job in jobs:
                 self.recorder.register_job(
                     job.name, job.workload, role=job.kind,
@@ -913,14 +1324,15 @@ class FleetSimulator:
         self._placements: List[Tuple[float, str, int]] = []
         self._departed: Dict[str, int] = {}
         self._failover: Dict[str, object] = {}
-        self._fail_i = 0
         self._pending: Deque[JobSpec] = deque()
-        arrivals = sorted(jobs, key=lambda j: (j.arrival, j.name))
+        self._jobs = list(jobs)
+        self._arrivals = sorted(jobs, key=lambda j: (j.arrival, j.name))
+        self._arr_i = 0
+        self._prev = -1.0
         n_ticks = int(math.ceil(self.horizon / self.check_interval))
         self._points = [j.arrival for j in jobs if j.arrival <= self.horizon]
         self._points += [i * self.check_interval for i in range(1, n_ticks)]
-        self._points += [f.time for f in self.failures
-                         if f.time <= self.horizon]
+        self._points += [a[0] for a in self._actions if a[0] <= self.horizon]
         self._points.append(self.horizon)
         heapq.heapify(self._points)
         if self.obs is not None:
@@ -931,26 +1343,35 @@ class FleetSimulator:
                 event_driven=self.event_driven)
             self._prof = self.obs.prof
             self._prof.start()
+        self._evt = _EventState() if self.event_driven else None
+        self._next_snap = self.snapshot_every
+
+    def _loop(self) -> None:
+        """Drive the decision-point loop to the horizon. Re-entrant in the
+        sense ``FleetSnapshot.resume`` needs: a deepcopied simulator calls
+        this again and continues exactly where the capture stopped."""
         if self.event_driven:
-            self._run_events(arrivals)
+            self._run_events()
         else:
-            self._run_lockstep(arrivals)
+            self._run_lockstep()
+
+    def _finish(self) -> FleetResult:
+        self._evt = None
         for d in self.devices:
             d.engine.finalize()
         if self._prof is not None:
             self._prof.stop()
-        return self._collect(jobs)
+        return self._collect(self._jobs)
 
-    def _run_lockstep(self, arrivals: List[JobSpec]) -> None:
+    def _run_lockstep(self) -> None:
         """Reference core: every device advances to every decision point."""
         pending = self._pending
-        arr_i = 0
-        prev = -1.0
+        arrivals = self._arrivals
         while self._points:
             t = heapq.heappop(self._points)
-            if t <= prev:                        # dedup; strict time order
+            if t <= self._prev:                  # dedup; strict time order
                 continue
-            prev = t
+            self._prev = t
             # strict at decision points so clients attach at exactly t; the
             # final advance keeps single-run semantics (the event crossing
             # the horizon is still recorded) — the 1-GPU equivalence
@@ -963,7 +1384,7 @@ class FleetSimulator:
                     d.engine.advance(t, strict=(t < self.horizon))
             if prof is not None:
                 prof.pop()
-            self._fail_devices(t)
+            self._apply_faults(t)
             if t > 0.0:
                 if prof is not None:
                     prof.push("slo")
@@ -971,37 +1392,45 @@ class FleetSimulator:
                 if prof is not None:
                     prof.pop()
                 self._depart_finished(t)
-            while arr_i < len(arrivals) and arrivals[arr_i].arrival <= t:
-                pending.append(arrivals[arr_i])
-                arr_i += 1
-            # HP services admit first; FIFO within each class
+            while (self._arr_i < len(arrivals)
+                   and arrivals[self._arr_i].arrival <= t):
+                job = arrivals[self._arr_i]
+                pending.append(job)
+                self._note_enqueued(job.name, t)
+                self._arr_i += 1
+            self._shed_expired(t)
+            # HP services admit first; FIFO within each class. Jobs inside
+            # a backoff window (``_eligible``) are skipped without a
+            # placement attempt — identically in both cores
             still: List[JobSpec] = []
             for job in sorted(pending,
                               key=lambda j: (j.kind != "hp_service",
                                              j.arrival)):
-                if t >= self.horizon or not self._place(job, t):
+                if (t >= self.horizon or job.name in self._eligible
+                        or not self._place(job, t)):
                     still.append(job)
             pending.clear()
             pending.extend(still)
+            self._maybe_snapshot(t)
 
-    def _run_events(self, arrivals: List[JobSpec]) -> None:
+    def _run_events(self) -> None:
         """Event-driven core: per-device next-activity times feed one
         fleet-wide priority queue; only due devices advance at each
         decision point (index order — the same order the lockstep loop
         advances them, so even a recorded trace is bit-identical)."""
-        evt = self._evt = _EventState()
+        evt = self._evt
+        assert evt is not None
         pending = self._pending
         pk = evt.pending_kinds
         queue = evt.queue
         devices = self.devices
-        arr_i = 0
-        prev = -1.0
+        arrivals = self._arrivals
         while self._points:
             t = heapq.heappop(self._points)
-            if t <= prev:                        # dedup; strict time order
+            if t <= self._prev:                  # dedup; strict time order
                 continue
-            evt.prev_point = prev
-            prev = t
+            evt.prev_point = self._prev
+            self._prev = t
             prof = self._prof
             if prof is not None:
                 prof.push("advance")
@@ -1021,7 +1450,7 @@ class FleetSimulator:
                     self._sync(devices[i], t)
             if prof is not None:
                 prof.pop()
-            self._fail_devices(t)
+            self._apply_faults(t)
             if t > 0.0:
                 if prof is not None:
                     prof.push("slo")
@@ -1029,13 +1458,25 @@ class FleetSimulator:
                 if prof is not None:
                     prof.pop()
                 self._depart_finished_events(t)
-            while arr_i < len(arrivals) and arrivals[arr_i].arrival <= t:
-                pending.append(arrivals[arr_i])
-                pk[arrivals[arr_i].kind] += 1
-                arr_i += 1
+            while (self._arr_i < len(arrivals)
+                   and arrivals[self._arr_i].arrival <= t):
+                job = arrivals[self._arr_i]
+                pending.append(job)
+                pk[job.kind] += 1
+                # a fresh job was never attempted at this revision: clear
+                # the kind's block so the pass below tries it (lockstep
+                # attempts every pending job at every point; the audit
+                # reject for this job at this rev must exist in both cores)
+                evt.blocked.pop(job.kind, None)
+                self._note_enqueued(job.name, t)
+                self._arr_i += 1
+            self._shed_expired(t)
             # admission pass only when some pending kind could place (a
             # kind that failed at the current fleet revision fails again:
-            # skipping the retry is exact, not heuristic)
+            # skipping the retry is exact, not heuristic).  Within a pass
+            # every non-gated job goes through _place, exactly like the
+            # lockstep loop — rejects are deduped per (job, rev), so the
+            # audit log stays byte-identical across cores.
             if (pending and t < self.horizon
                     and any(pk[k] and evt.blocked.get(k) != evt.rev
                             for k in JOB_KINDS)):
@@ -1043,14 +1484,44 @@ class FleetSimulator:
                 for job in sorted(pending,
                                   key=lambda j: (j.kind != "hp_service",
                                                  j.arrival)):
-                    if (evt.blocked.get(job.kind) == evt.rev
-                            or not self._place(job, t)):
+                    if job.name in self._eligible or not self._place(job, t):
                         still.append(job)
                     else:
                         pk[job.kind] -= 1
                 pending.clear()
                 pending.extend(still)
-        self._evt = None
+            self._maybe_snapshot(t)
+
+    # -- snapshot / restore (repro.resilience) ---------------------------------
+
+    def _maybe_snapshot(self, t: float) -> None:
+        """Periodic capture: one snapshot at the first decision point at
+        or past each ``snapshot_every`` mark (never at the horizon — the
+        run is complete there)."""
+        if (self._next_snap is None or t < self._next_snap
+                or t >= self.horizon):
+            return
+        while self._next_snap <= t:
+            self._next_snap += self.snapshot_every
+        self.snapshots.append(self.snapshot())
+
+    def snapshot(self) -> "FleetSnapshot":
+        """Capture the complete mid-run state — engines, queues, quantile
+        windows, audit ``_rev``, fault cursors, the attached ``ObsHub``
+        and recorder — as an in-memory deepcopy that can continue the run
+        (``FleetSnapshot.resume``) bit-exactly. Earlier snapshots are not
+        part of the capture (a restore does not restore *other*
+        restores). Valid once ``run()`` has started; the periodic
+        ``snapshot_every`` captures land in ``self.snapshots``."""
+        if not self._ran:
+            raise RuntimeError("snapshot() is only meaningful once run() "
+                               "has started (snapshot_every or mid-loop)")
+        snaps, self.snapshots = self.snapshots, []
+        try:
+            clone = copy.deepcopy(self)
+        finally:
+            self.snapshots = snaps
+        return FleetSnapshot(sim=clone, taken_at=self._prev)
 
     def _add_point(self, t: float) -> None:
         """Register a future decision point discovered mid-run (a BE
@@ -1085,6 +1556,21 @@ class FleetSimulator:
                 hp_busy_s=eng.ex.hp_busy_time,
                 be_busy_s=eng.ex.be_busy_time,
                 clock=eng.ex.clock))
+        if self._resil_active:
+            result.shed = list(self._shed_list)
+            result.resilience = {
+                "faults_applied": float(self._n_faults),
+                "stalls": float(self._n_stalls),
+                "recoveries": float(self._n_recoveries),
+                "requeues": float(self._n_requeues),
+                "pressure_evictions": float(self._n_pressure),
+                "gang_restarts": float(self._n_gang_restarts),
+                "shed_jobs": float(len(self._shed_list)),
+                "quarantined_devices": float(sum(
+                    1 for d in self.devices
+                    if d.quarantined_until > -math.inf)),
+                "lost_work_s": self._lost_work,
+            }
         if self.obs is not None:
             result.self_profile = self.obs.prof.report()
         return result
@@ -1132,3 +1618,41 @@ class FleetSimulator:
                         samples=samples, rate=rate,
                         norm_tput=rate / iso_rate if iso_rate else 0.0,
                         migrations=n_migr, active_span=span)
+
+
+# ---------------------------------------------------------------------------
+# Snapshot / restore
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class FleetSnapshot:
+    """A resumable mid-run capture of a ``FleetSimulator``, taken at
+    decision point ``taken_at`` (see ``FleetSimulator.snapshot`` and the
+    ``snapshot_every=`` constructor knob; re-exported from
+    ``repro.resilience``).
+
+    ``resume()`` continues the captured run to the horizon and returns a
+    ``FleetResult`` bit-identical to the uninterrupted run's — including
+    the attached ``ObsHub``'s registry and audit log, which are part of
+    the capture (wall-clock ``self_profile`` is the one documented
+    exception, as everywhere else). Resuming is single-use, exactly like
+    ``run()``: the captured engines carry state. Use ``fork()`` first to
+    keep the snapshot for repeated what-if restores."""
+
+    sim: Optional[FleetSimulator]
+    taken_at: float
+    resumed: bool = False
+
+    def fork(self) -> "FleetSnapshot":
+        if self.sim is None or self.resumed:
+            raise RuntimeError("snapshot already resumed")
+        return FleetSnapshot(sim=copy.deepcopy(self.sim),
+                             taken_at=self.taken_at)
+
+    def resume(self) -> FleetResult:
+        if self.sim is None or self.resumed:
+            raise RuntimeError("snapshot already resumed")
+        self.resumed = True
+        self.sim._loop()
+        return self.sim._finish()

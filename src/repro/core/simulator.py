@@ -30,7 +30,6 @@ from __future__ import annotations
 
 import bisect
 import heapq
-import itertools
 import math
 from collections import deque
 from dataclasses import dataclass
@@ -217,8 +216,11 @@ class SimExecutor:
         # (arrivals pop in time order, so consumption is an index bump)
         self._arr_times: List[float] = []
         self._arr_i = 0
-        self._seq = itertools.count()
-        self._launch_ids = itertools.count()
+        # plain-int counters (not itertools.count): the resilience layer
+        # snapshots executors mid-run via deepcopy, which count objects
+        # don't support portably
+        self._seq = 0
+        self._launch_ids = 0
         self.inflight: Optional[_Inflight] = None
         self.scheduler: Optional[TallyScheduler] = None   # wired post-init
         self.be_busy_time = 0.0
@@ -229,7 +231,9 @@ class SimExecutor:
     # -- event plumbing -------------------------------------------------------
 
     def _push(self, t: float, kind: int, payload: Any) -> None:
-        heapq.heappush(self.events, (t, next(self._seq), kind, payload))
+        s = self._seq
+        self._seq = s + 1
+        heapq.heappush(self.events, (t, s, kind, payload))
         if kind == ARRIVAL:
             bisect.insort(self._arr_times, t, lo=self._arr_i)
 
@@ -297,7 +301,8 @@ class SimExecutor:
     # -- launches --------------------------------------------------------------
 
     def launch_hp(self, client: Client, pk: PendingKernel) -> None:
-        lid = next(self._launch_ids)
+        lid = self._launch_ids
+        self._launch_ids = lid + 1
         dur = pk.kernel.duration(self.dev)
         inf = _Inflight(lid, "hp", client, pk=pk, start=self.clock,
                         end=self.clock + dur)
@@ -310,7 +315,8 @@ class SimExecutor:
 
     def launch_be(self, client: Client, prog: BEProgress,
                   cfg: LaunchConfig) -> None:
-        lid = next(self._launch_ids)
+        lid = self._launch_ids
+        self._launch_ids = lid + 1
         k = prog.pending.kernel
         if cfg.mode == "slice":
             s = max(1, math.ceil(k.blocks / cfg.param))
@@ -361,7 +367,8 @@ class SimExecutor:
                     # preempt-mode launch crossing an arrival), so the
                     # count is engine-invariant
                     self.obs.preempt(self.clock)
-                lid = next(self._launch_ids)    # supersede completion event
+                lid = self._launch_ids          # supersede completion event
+                self._launch_ids = lid + 1
                 inf.launch_id = lid
                 self._push(inf.end, COMPLETE, lid)
         # slice/default launches are short/terminal: let them run out
@@ -512,6 +519,52 @@ class _FastForward:
         # launch order) folded in one accumulate at _flush
         self._busy_pend: List[Any] = []
 
+    def __deepcopy__(self, memo):
+        """Copy with the ``id()``-keyed memo dicts re-keyed to the copied
+        objects (a naive deepcopy would keep the *old* ids as keys: every
+        lookup would miss, and — worse — a recycled id could alias a stale
+        entry onto an unrelated kernel). Every keyed object is held in
+        ``_pins``, so the remap is total; carrying the caches over means a
+        restored run re-prices and re-profiles nothing, keeping its hook
+        sequence (obs ``profiled`` counters) identical to an uninterrupted
+        run. Used by ``repro.resilience.snapshot``."""
+        import copy as _copy
+        cls = self.__class__
+        new = cls.__new__(cls)
+        memo[id(self)] = new
+        new.eng = _copy.deepcopy(self.eng, memo)
+        new.ex = _copy.deepcopy(self.ex, memo)
+        new.sched = _copy.deepcopy(self.sched, memo)
+        new.dev = self.dev
+        remap: Dict[int, int] = {}
+        new._pins = {}
+        for old_id, obj in self._pins.items():
+            cobj = _copy.deepcopy(obj, memo)
+            new._pins[id(cobj)] = cobj
+            remap[old_id] = id(cobj)
+        new._durs = {remap[k]: v for k, v in self._durs.items()}
+        new._req_plans = {remap[k]: v.copy()
+                          for k, v in self._req_plans.items()}
+        new._req_head = {
+            remap[k]: (v if v is False
+                       else (_copy.deepcopy(v[0], memo), v[1].copy()))
+            for k, v in self._req_head.items()}
+        new._req_tail = {
+            remap[k]: (v if v is False
+                       else (_copy.deepcopy(v[0], memo), v[1].copy()))
+            for k, v in self._req_tail.items()}
+        new._norun_rid = self._norun_rid
+        new._cfgs = {remap[k]: v for k, v in self._cfgs.items()}
+        new._price = {(remap[k[0]],) + k[1:]: v
+                      for k, v in self._price.items()}
+        new._tput = {remap[k]: _copy.deepcopy(v, memo)
+                     for k, v in self._tput.items()}
+        new._backlog = _copy.deepcopy(self._backlog, memo)
+        new._timers = list(self._timers)
+        new._tmin = self._tmin
+        new._busy_pend = _copy.deepcopy(self._busy_pend, memo)
+        return new
+
     # -- memoized pricing ------------------------------------------------------
 
     def _duration(self, k: SimKernel) -> float:
@@ -537,12 +590,14 @@ class _FastForward:
             # object reuse) poisons the entry instead — batching then
             # simply never applies to that head
             head = id(kernels[0])
-            prior = self._req_head.get(head)
+            self._pins[head] = kernels[0]     # keyed objects must stay
+            prior = self._req_head.get(head)  # pinned (snapshot remapping)
             if prior is None:
                 self._req_head[head] = (kernels, arr)
             elif prior is not False and prior[0] is not kernels:
                 self._req_head[head] = False
             tail = id(kernels[-1])
+            self._pins[tail] = kernels[-1]
             prior = self._req_tail.get(tail)
             if prior is None:
                 self._req_tail[tail] = (kernels, arr)
@@ -1232,10 +1287,11 @@ class DeviceEngine:
             m = int(np.searchsorted(ts, self.duration, side="left"))
             if m:
                 events = ex.events
-                seq = ex._seq
+                seq0 = ex._seq
+                ex._seq = seq0 + m
                 iteration = workload.iteration
                 events.extend(
-                    (float(ts[rid]), next(seq), ARRIVAL,
+                    (float(ts[rid]), seq0 + rid, ARRIVAL,
                      (rid, iteration(rid)))
                     for rid in range(m))
                 heapq.heapify(events)
@@ -1300,6 +1356,19 @@ class DeviceEngine:
         else:
             self.sched.run(until, strict=strict)
         self.ex.clock = max(self.ex.clock, until)
+
+    def stall_until(self, t: float) -> None:
+        """Freeze the device's output until ``t`` (the resilience layer's
+        transient device stalls). The clock jumps; queued events keep
+        their timestamps but are *processed* at ``max(clock, t)`` by both
+        engines (``_run``'s clock fold, and the fast path's closed forms
+        floor service start at the clock), so everything that arrives
+        during the outage is served back-to-back at recovery — the stall
+        surfaces as a latency spike, bit-exactly on fast and reference
+        engines. Callers detach resident BE clients first (their in-flight
+        launch would otherwise be credited as if it ran through the
+        outage)."""
+        self.ex.clock = max(self.ex.clock, min(t, self.duration))
 
     def _quiescent(self) -> bool:
         """True when no event can ever fire again without a new attach:

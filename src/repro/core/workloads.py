@@ -355,6 +355,8 @@ def cluster_workload(n_devices: int, *, duration: float = 60.0,
                      failure_rate: float = 0.0, dev: DeviceModel = A100,
                      resident_fraction: float = 1 / 3,
                      trace_pool: int = 8,
+                     burst_jobs: int = 0,
+                     burst_time: Optional[float] = None,
                      seed: int = 0) -> ClusterWorkload:
     """Generate a Philly-style multi-tenant cluster scenario.
 
@@ -370,8 +372,11 @@ def cluster_workload(n_devices: int, *, duration: float = 60.0,
     ``gang_fraction`` share of BE submissions expands into a gang of
     2..``max_gang`` members sharing one arrival instant. Node failures
     are a homogeneous Poisson process at ``failure_rate`` per device per
-    second. Everything derives from ``seed`` — same arguments, same
-    scenario, bit for bit."""
+    second. ``burst_jobs`` adds an overload burst — that many extra BE
+    submissions landing at one instant (``burst_time``, default
+    mid-run), the admission-shedding stressor of the resilience layer.
+    Everything derives from ``seed`` — same arguments, same scenario,
+    bit for bit."""
     from repro.core.fleet import DeviceFailure, be_job, hp_service
 
     rng = np.random.default_rng(seed)
@@ -419,6 +424,18 @@ def cluster_workload(n_devices: int, *, duration: float = 60.0,
         if size > 1:
             gangs[gang_id] = members
             gang_id += 1
+    if burst_jobs > 0:
+        # overload burst: a thundering herd of short BE jobs at one
+        # instant (drawn after the base scenario, so burst_jobs=0 leaves
+        # legacy scenarios bit-identical)
+        bt = float(burst_time) if burst_time is not None else 0.5 * duration
+        for _ in range(burst_jobs):
+            name = be_names[int(rng.integers(len(be_names)))]
+            be_dur = (float(rng.uniform(0.1, 0.4)) * be_duration_frac
+                      * duration if be_duration_frac > 0 else None)
+            jobs.append(be_job(f"burst-{i}", _wl(name, 1),
+                               arrival=bt, duration=be_dur))
+            i += 1
     if failure_rate > 0.0:
         frng = np.random.default_rng(seed + 2)
         for d in range(n_devices):

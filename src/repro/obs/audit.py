@@ -24,7 +24,13 @@ from dataclasses import dataclass, field
 from typing import Dict, Iterator, List, Optional
 
 KINDS = ("placement", "admission_reject", "slo_check", "migration",
-         "migration_blocked", "be_preempt", "failure", "departure")
+         "migration_blocked", "be_preempt", "failure", "departure",
+         # resilience layer (PR 8): transient stalls, recoveries,
+         # fault/pressure requeues, circuit-breaker quarantines, and
+         # shed (dropped) jobs — recorded only when faults or
+         # recovery/shedding policies are active, so fault-free logs are
+         # byte-identical to pre-resilience runs
+         "stall", "recover", "requeue", "quarantine", "shed")
 
 
 @dataclass

@@ -142,6 +142,17 @@ def _device_lanes(result, hub: ObsHub, *, w: int = 860,
     for m in getattr(result, "migrations", []):
         mig_by_dev.setdefault(m.src, []).append(m)
         mig_by_dev.setdefault(m.dst, []).append(m)
+    # resilience annotations (records exist only when faults/policies ran)
+    stall_by_dev: Dict[int, List] = {}
+    rec_by_dev: Dict[int, List] = {}
+    quar_by_dev: Dict[int, List] = {}
+    for r in hub.audit.filter(kind="stall"):
+        stall_by_dev.setdefault(r.device, []).append(r)
+    for r in hub.audit.filter(kind="recover"):
+        rec_by_dev.setdefault(r.device, []).append(r)
+    for r in hub.audit.filter(kind="quarantine"):
+        quar_by_dev.setdefault(r.device, []).append(r)
+    has_resil = bool(stall_by_dev or rec_by_dev or quar_by_dev)
     for li, d in enumerate(shown):
         y = 20 + li * (lane_h + gap)
         parts.append(f'<text x="{pad - 4}" y="{y + lane_h - 4}" '
@@ -179,6 +190,31 @@ def _device_lanes(result, hub: ObsHub, *, w: int = 860,
                 f'x2="{px(m.time):.1f}" y2="{y + lane_h}" stroke="{color}" '
                 f'stroke-width="2"><title>t={m.time:.2f}s {_esc(m.job)} '
                 f'd{m.src}&#8594;d{m.dst}</title></line>')
+        for r in stall_by_dev.get(d.index, ()):
+            until = min(r.details.get("until", r.t), horizon)
+            parts.append(
+                f'<rect x="{px(r.t):.1f}" y="{y}" '
+                f'width="{max(1.0, px(until) - px(r.t)):.1f}" '
+                f'height="{lane_h}" fill="#6b7280" opacity="0.45">'
+                f'<title>d{d.index} stalled [{r.t:.2f},{until:.2f}]s, '
+                f'requeued {_esc(r.details.get("requeued", []))}'
+                f'</title></rect>')
+        for r in rec_by_dev.get(d.index, ()):
+            parts.append(
+                f'<line x1="{px(r.t):.1f}" y1="{y}" '
+                f'x2="{px(r.t):.1f}" y2="{y + lane_h}" stroke="#2fa84b" '
+                f'stroke-width="2" stroke-dasharray="2,2">'
+                f'<title>d{d.index} recovered at t={r.t:.2f}s '
+                f'({_esc(r.details.get("reason", ""))})</title></line>')
+        for r in quar_by_dev.get(d.index, ()):
+            until = r.details.get("until", math.inf)
+            u = "forever" if math.isinf(until) else f"until {until:.2f}s"
+            parts.append(
+                f'<line x1="{px(r.t):.1f}" y1="{y}" '
+                f'x2="{px(r.t):.1f}" y2="{y + lane_h}" stroke="#8b2fd8" '
+                f'stroke-width="2"><title>d{d.index} quarantined at '
+                f't={r.t:.2f}s ({u}, '
+                f'{r.details.get("fault_count", 0)} faults)</title></line>')
         if d.failed:
             parts.append(
                 f'<line x1="{px(d.failed_at):.1f}" y1="{y}" '
@@ -197,7 +233,14 @@ def _device_lanes(result, hub: ObsHub, *, w: int = 860,
               '<span><span class="swatch" style="background:#d84b2f">'
               '</span>migration out</span>'
               '<span><span class="swatch" style="background:#d8a02f">'
-              '</span>migration in</span></div>')
+              '</span>migration in</span>'
+              + ('<span><span class="swatch" style="background:#6b7280">'
+                 '</span>stall outage</span>'
+                 '<span><span class="swatch" style="background:#2fa84b">'
+                 '</span>recovery</span>'
+                 '<span><span class="swatch" style="background:#8b2fd8">'
+                 '</span>quarantine</span>' if has_resil else '')
+              + '</div>')
     return "".join(parts) + legend + note
 
 
@@ -228,6 +271,17 @@ def render_dashboard(result, hub: ObsHub, path: Optional[str] = None,
             for k, v in prof.items())
         prof_html = (f"<h2>Simulator self-profile (wall clock)</h2>"
                      f"<table>{rows}</table>")
+    resil = getattr(result, "resilience", None)
+    resil_html = ""
+    if resil:
+        rows = "".join(
+            f"<tr><th>{_esc(k)}</th><td>{_fmt(v, 5)}</td></tr>"
+            for k, v in resil.items())
+        shed = getattr(result, "shed", []) or []
+        shed_note = (f"<div class='meta'>shed jobs: "
+                     f"{_esc(', '.join(shed))}</div>" if shed else "")
+        resil_html = (f"<h2>Resilience (faults / recoveries / shedding)"
+                      f"</h2><table>{rows}</table>{shed_note}")
 
     # HP p99 vs SLO bound, one line per service
     p99_series: Dict[str, Tuple[List[float], List[float]]] = {}
@@ -275,6 +329,7 @@ def render_dashboard(result, hub: ObsHub, path: Optional[str] = None,
         f"<h1>{_esc(title)}</h1>",
         f"<div class='meta'>{_esc(meta)}</div>",
         f"<h2>Run summary</h2><table>{head_cells}</table>",
+        resil_html,
         prof_html,
         "<h2>Per-device occupancy (HP / BE busy fraction)</h2>",
         _device_lanes(result, hub),

@@ -131,6 +131,9 @@ class ServingProbe:
             "opportunistic best-effort training quanta granted").child()
         self.active = r.gauge(
             "tally_serving_active_slots", "decode slots in use").child()
+        self.sheds = r.counter(
+            "tally_serving_sheds_total",
+            "requests shed after exceeding their deadline", ("where",))
 
     def admitted(self, ttft: float) -> None:
         self.ttft.observe(ttft)
@@ -144,6 +147,9 @@ class ServingProbe:
 
     def slots(self, n: float) -> None:
         self.active.set(n)
+
+    def shed_request(self, where: str) -> None:
+        self.sheds.child(where).v += 1.0
 
 
 class ObsHub:
@@ -211,6 +217,27 @@ class ObsHub:
             "tally_device_failures_total", "injected device failures")
         self._departures = r.counter(
             "tally_departures_total", "job departures (drained BE jobs)")
+        # resilience-layer families (children only materialize when the
+        # resilience machinery fires, so fault-free runs expose them empty
+        # and stay byte-identical across cores)
+        self._stalls = r.counter(
+            "tally_device_stalls_total", "injected transient device stalls")
+        self._recoveries = r.counter(
+            "tally_device_recoveries_total",
+            "devices returned to placement eligibility", ("reason",))
+        self._requeues = r.counter(
+            "tally_requeues_total",
+            "BE jobs detached and re-queued for re-admission", ("reason",))
+        self._quarantines = r.counter(
+            "tally_quarantines_total",
+            "circuit-breaker device quarantines")
+        self._sheds = r.counter(
+            "tally_sheds_total", "jobs dropped by overload shedding",
+            ("kind",))
+        self._be_preempts_fleet = r.counter(
+            "tally_fleet_be_preempts_total",
+            "fleet-level BE preemption events (storms, SLO pressure)",
+            ("reason",))
         # end-of-run per-device gauges
         self._g_clock = r.gauge(
             "tally_device_clock_seconds", "final device clock", ("device",))
@@ -300,3 +327,43 @@ class ObsHub:
     def departure(self, t: float, job: str, device: int) -> None:
         self._departures.child().v += 1.0
         self.audit.record(t, "departure", job, device)
+
+    # -- resilience hooks (fired only when faults/policies are active, so
+    #    fault-free audit logs and registries stay byte-identical to
+    #    pre-resilience runs; see core/fleet.py `_resil_active`) -----------
+
+    def device_stall(self, t: float, device: int, until: float,
+                     requeued: List[str]) -> None:
+        self._stalls.child().v += 1.0
+        self.audit.record(t, "stall", "", device, until=until,
+                          requeued=requeued)
+
+    def device_recover(self, t: float, device: int, reason: str) -> None:
+        self._recoveries.child(reason).v += 1.0
+        self.audit.record(t, "recover", "", device, reason=reason)
+
+    def requeue(self, t: float, name: str, device: int, reason: str,
+                attempt: int, eligible_at: float, lost: float,
+                gang: Optional[str]) -> None:
+        self._requeues.child(reason).v += 1.0
+        self.audit.record(t, "requeue", name, device, reason=reason,
+                          attempt=attempt, eligible_at=eligible_at,
+                          lost_work=lost, gang=gang)
+
+    def quarantine(self, t: float, device: int, fault_count: int,
+                   until: float) -> None:
+        self._quarantines.child().v += 1.0
+        self.audit.record(t, "quarantine", "", device,
+                          fault_count=fault_count, until=until)
+
+    def shed(self, t: float, name: str, kind: str, reason: str,
+             device: Optional[int] = None) -> None:
+        self._sheds.child(kind).v += 1.0
+        self.audit.record(t, "shed", name, device, job_kind=kind,
+                          reason=reason)
+
+    def be_preempt(self, t: float, device: int, requeued: List[str],
+                   reason: str) -> None:
+        self._be_preempts_fleet.child(reason).v += 1.0
+        self.audit.record(t, "be_preempt", "", device, requeued=requeued,
+                          reason=reason)

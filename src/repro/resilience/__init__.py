@@ -1,0 +1,36 @@
+"""Resilience layer: deterministic fault injection, recovery policies,
+overload shedding, and crash-resumable fleet sweeps.
+
+Everything here is opt-in — a ``FleetSimulator`` run with none of the
+``faults= / recovery= / shedding= / gangs= / snapshot_every=`` knobs is
+byte-identical to a pre-resilience run — and deterministic: seeded fault
+plans replay identically across the lockstep and event-driven fleet
+cores, every fault/recovery/shed/quarantine decision lands in the
+``AuditLog``, and a mid-run ``FleetSnapshot`` resumes bit-exactly.
+
+Quickstart::
+
+    from repro.core.fleet import FleetSimulator
+    from repro.resilience import chaos_plan, RecoveryPolicy, SheddingPolicy
+
+    plan = chaos_plan(16, 60.0, seed=7, stalls=6, rack_failures=1,
+                      stragglers=1, storms=1)
+    sim = FleetSimulator(16, faults=plan.events,
+                         recovery=RecoveryPolicy(backoff_base=0.5,
+                                                 breaker_threshold=4),
+                         shedding=SheddingPolicy(max_requeues=5,
+                                                 max_queue_delay=20.0,
+                                                 pressure_evict=True))
+"""
+from .faults import (BEPreemption, DeviceFailure, DeviceStall, FaultEvent,
+                     FaultPlan, chaos_plan)
+from .policies import RecoveryPolicy, SheddingPolicy
+from .snapshot import (FleetSnapshot, SweepState, load_sweep_state,
+                       save_sweep_state)
+
+__all__ = [
+    "BEPreemption", "DeviceFailure", "DeviceStall", "FaultEvent",
+    "FaultPlan", "chaos_plan",
+    "RecoveryPolicy", "SheddingPolicy",
+    "FleetSnapshot", "SweepState", "load_sweep_state", "save_sweep_state",
+]

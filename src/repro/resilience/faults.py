@@ -1,0 +1,172 @@
+"""Deterministic fault-injection plans for the fleet simulator.
+
+A *fault plan* generalizes the one-shot ``DeviceFailure`` of the PR-6
+fleet into a schedulable stream of fault events — permanent node losses,
+transient device stalls with recovery times, and cluster-level BE
+preemptions — that the ``FleetSimulator`` applies identically in its
+lockstep and event-driven cores (``faults=`` constructor knob). The
+event types themselves live in ``core/fleet.py`` (re-exported here) so
+the core stays import-free; this module owns the *generators*.
+
+``chaos_plan`` is the seeded scenario generator: given a fleet size, a
+horizon, and a seed it draws transient stalls, correlated rack-level
+failures, kernel-straggler micro-stall trains, and preemption storms
+from a single ``numpy`` generator with a fixed draw order — so the same
+``(n_devices, horizon, seed, knobs)`` tuple always yields the same plan,
+on any machine, and both fleet cores replay it bit-exactly (guarded by
+``tests/test_resilience.py`` and the CI ``chaos-smoke`` job).
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Iterator, List, Optional
+
+import numpy as np
+
+from ..core.fleet import BEPreemption, DeviceFailure, DeviceStall, FaultEvent
+
+__all__ = ["DeviceFailure", "DeviceStall", "BEPreemption", "FaultEvent",
+           "FaultPlan", "chaos_plan"]
+
+_EVENT_KINDS = {"fail": DeviceFailure, "stall": DeviceStall,
+                "preempt": BEPreemption}
+
+
+def _sort_key(e: FaultEvent):
+    # stable, type-independent order: time, device, kind tag, duration
+    kind = ("fail" if isinstance(e, DeviceFailure)
+            else "stall" if isinstance(e, DeviceStall) else "preempt")
+    return (e.time, e.device, kind, getattr(e, "duration", 0.0))
+
+
+@dataclass
+class FaultPlan:
+    """A reproducible, serializable list of fault events.
+
+    ``events`` is kept sorted; ``seed``/``meta`` record provenance so a
+    CI artifact or a saved sweep state can regenerate or audit the exact
+    plan that ran. Pass ``plan.events`` (or the plan itself — it
+    iterates) as ``FleetSimulator(faults=...)``.
+    """
+
+    events: List[FaultEvent] = field(default_factory=list)
+    seed: Optional[int] = None
+    meta: dict = field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        self.events = sorted(self.events, key=_sort_key)
+
+    def __iter__(self) -> Iterator[FaultEvent]:
+        return iter(self.events)
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    def to_json(self, path: Optional[str] = None) -> str:
+        rows = []
+        for e in self.events:
+            if isinstance(e, DeviceStall):
+                rows.append({"kind": "stall", "time": e.time,
+                             "device": e.device, "duration": e.duration})
+            elif isinstance(e, DeviceFailure):
+                rows.append({"kind": "fail", "time": e.time,
+                             "device": e.device})
+            else:
+                rows.append({"kind": "preempt", "time": e.time,
+                             "device": e.device})
+        text = json.dumps({"seed": self.seed, "meta": self.meta,
+                           "events": rows}, indent=1, sort_keys=True)
+        if path is not None:
+            with open(path, "w") as f:
+                f.write(text)
+        return text
+
+    @classmethod
+    def from_json(cls, text_or_path: str) -> "FaultPlan":
+        text = text_or_path
+        if not text_or_path.lstrip().startswith("{"):
+            with open(text_or_path) as f:
+                text = f.read()
+        d = json.loads(text)
+        events: List[FaultEvent] = []
+        for row in d.get("events", []):
+            kind = row["kind"]
+            if kind == "stall":
+                events.append(DeviceStall(time=row["time"],
+                                          device=row["device"],
+                                          duration=row["duration"]))
+            elif kind == "fail":
+                events.append(DeviceFailure(time=row["time"],
+                                            device=row["device"]))
+            elif kind == "preempt":
+                events.append(BEPreemption(time=row["time"],
+                                           device=row["device"]))
+            else:
+                raise ValueError(f"unknown fault kind {kind!r}")
+        return cls(events=events, seed=d.get("seed"), meta=d.get("meta", {}))
+
+
+def chaos_plan(n_devices: int, horizon: float, *, seed: int = 0,
+               stalls: int = 0, stall_duration: float = 1.0,
+               rack_size: int = 8, rack_failures: int = 0,
+               stragglers: int = 0, straggler_stalls: int = 6,
+               storms: int = 0) -> FaultPlan:
+    """Seeded chaos scenario: the four fault regimes of the resilience
+    layer in one plan.
+
+    - ``stalls`` transient outages on uniformly drawn devices, with
+      Exponential(``stall_duration``) durations — a device freezes and
+      serves its backlog back-to-back at recovery.
+    - ``rack_failures`` *correlated* failures: a rack of ``rack_size``
+      consecutive devices is lost at one instant (every device in it
+      gets a ``DeviceFailure`` at the same timestamp).
+    - ``stragglers`` devices receive a train of ``straggler_stalls``
+      micro-stalls (a tenth of ``stall_duration`` each, evenly spaced
+      over half the horizon) — the kernel-straggler regime that trips
+      circuit breakers.
+    - ``storms`` preemption storms: at one instant every device sees a
+      ``BEPreemption``, bumping all best-effort residents back into the
+      admission queue at once.
+
+    All draws come from one ``np.random.default_rng(seed)`` in a fixed
+    order, and event times land in ``[0.05, 0.85] * horizon`` so the
+    fleet has room to recover inside the run.
+    """
+    if n_devices <= 0:
+        raise ValueError("n_devices must be positive")
+    rng = np.random.default_rng(seed)
+    lo, hi = 0.05 * horizon, 0.85 * horizon
+    events: List[FaultEvent] = []
+    for _ in range(stalls):
+        t = float(rng.uniform(lo, hi))
+        dev = int(rng.integers(0, n_devices))
+        dur = float(max(1e-3, rng.exponential(stall_duration)))
+        events.append(DeviceStall(time=t, device=dev, duration=dur))
+    n_racks = max(1, n_devices // max(1, rack_size))
+    for _ in range(rack_failures):
+        t = float(rng.uniform(lo, hi))
+        rack = int(rng.integers(0, n_racks))
+        first = rack * rack_size
+        for dev in range(first, min(first + rack_size, n_devices)):
+            events.append(DeviceFailure(time=t, device=dev))
+    micro = max(1e-3, stall_duration / 10.0)
+    for _ in range(stragglers):
+        dev = int(rng.integers(0, n_devices))
+        start = float(rng.uniform(lo, 0.5 * horizon))
+        span = 0.5 * horizon - micro * straggler_stalls
+        step = max(micro * 2.0, span / max(1, straggler_stalls))
+        for k in range(straggler_stalls):
+            t = start + k * step
+            if t >= hi:
+                break
+            events.append(DeviceStall(time=t, device=dev, duration=micro))
+    for _ in range(storms):
+        t = float(rng.uniform(lo, hi))
+        for dev in range(n_devices):
+            events.append(BEPreemption(time=t, device=dev))
+    return FaultPlan(events=events, seed=seed, meta={
+        "n_devices": n_devices, "horizon": horizon, "stalls": stalls,
+        "stall_duration": stall_duration, "rack_size": rack_size,
+        "rack_failures": rack_failures, "stragglers": stragglers,
+        "straggler_stalls": straggler_stalls, "storms": storms})

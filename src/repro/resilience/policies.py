@@ -1,0 +1,103 @@
+"""Recovery and overload-shedding policies for the fleet simulator.
+
+These are the reference implementations of the duck-typed ``recovery=``
+and ``shedding=`` knobs on ``FleetSimulator`` — the core stays
+import-free and only relies on the attribute/method surface defined
+here. Everything is deterministic by construction: backoff jitter is a
+pure hash of ``(job name, attempt)`` (``zlib.crc32``, never Python's
+salted ``hash``), so both fleet cores — and a snapshot-restored run —
+compute identical delays.
+
+``RecoveryPolicy``
+    - exponential-backoff re-admission (``requeue_delay``): a requeued
+      job waits ``restart_cost + base * factor**(attempt-1)`` seconds
+      (capped at ``backoff_max``), optionally spread by ``±jitter``.
+    - checkpoint-aware restart (``lost_work``): with a
+      ``checkpoint_interval`` the work since the last (implicit)
+      periodic checkpoint is lost on eviction — the fleet rolls the
+      in-flight kernel back to its last watermark and books
+      ``lost_work`` into ``FleetResult.resilience['lost_work_s']``.
+      Without one, progress carries over exactly (PR-6 semantics) and
+      nothing is lost.
+    - circuit breaker: a device that stalls ``breaker_threshold`` times
+      is quarantined out of placement for ``breaker_cooldown`` seconds
+      (``None``/``inf`` = permanently).
+    - ``gang_restart``: a fault hitting any gang member requeues every
+      resident member fleet-wide behind one shared re-admission gate.
+
+``SheddingPolicy``
+    - ``max_requeues``: a job evicted more than this many times is shed
+      (dropped for good) instead of re-queued.
+    - ``max_queue_delay``: a pending job that stays admissible longer
+      than this without placing is shed at the next decision point.
+    - ``pressure_evict``: when an SLO breach finds no migration
+      destination, evict the most disruptive BE resident through the
+      requeue path instead of leaving the HP service to degrade.
+"""
+from __future__ import annotations
+
+import math
+import zlib
+from dataclasses import dataclass
+from typing import Optional
+
+__all__ = ["RecoveryPolicy", "SheddingPolicy"]
+
+
+@dataclass(frozen=True)
+class RecoveryPolicy:
+    backoff_base: float = 0.5
+    backoff_factor: float = 2.0
+    backoff_max: float = 30.0
+    jitter: float = 0.0                 # fraction of the delay, in [0, 1)
+    restart_cost: float = 0.0           # fixed per-restart overhead (s)
+    checkpoint_interval: Optional[float] = None
+    breaker_threshold: Optional[int] = None
+    breaker_cooldown: Optional[float] = None   # None = quarantine forever
+    gang_restart: bool = True
+
+    def __post_init__(self) -> None:
+        if self.backoff_base < 0 or self.backoff_factor < 1.0:
+            raise ValueError("backoff_base >= 0 and backoff_factor >= 1 "
+                             "required")
+        if not 0.0 <= self.jitter < 1.0:
+            raise ValueError("jitter must be in [0, 1)")
+        if self.checkpoint_interval is not None \
+                and not self.checkpoint_interval > 0:
+            raise ValueError("checkpoint_interval must be positive")
+        if self.breaker_threshold is not None and self.breaker_threshold < 1:
+            raise ValueError("breaker_threshold must be >= 1")
+
+    def requeue_delay(self, name: str, attempt: int) -> float:
+        """Seconds the ``attempt``-th requeue of ``name`` must wait
+        before re-admission. Deterministic across cores, runs, and
+        machines (crc32 jitter, no RNG state)."""
+        delay = min(self.backoff_max,
+                    self.backoff_base * self.backoff_factor ** (attempt - 1))
+        if self.jitter > 0.0 and delay > 0.0:
+            u = zlib.crc32(f"{name}:{attempt}".encode()) / 0xFFFFFFFF
+            delay *= 1.0 + self.jitter * (2.0 * u - 1.0)
+        return self.restart_cost + delay
+
+    def lost_work(self, placed_at: float, now: float) -> float:
+        """Work (seconds) lost by evicting a job placed at ``placed_at``:
+        time since its last periodic checkpoint, or zero when progress
+        carries over exactly (no checkpointing configured)."""
+        run = max(0.0, now - placed_at)
+        if self.checkpoint_interval is None:
+            return 0.0
+        return math.fmod(run, self.checkpoint_interval)
+
+
+@dataclass(frozen=True)
+class SheddingPolicy:
+    max_requeues: Optional[int] = None
+    max_queue_delay: Optional[float] = None
+    pressure_evict: bool = False
+
+    def __post_init__(self) -> None:
+        if self.max_requeues is not None and self.max_requeues < 0:
+            raise ValueError("max_requeues must be >= 0")
+        if self.max_queue_delay is not None \
+                and not self.max_queue_delay > 0:
+            raise ValueError("max_queue_delay must be positive")

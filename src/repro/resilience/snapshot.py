@@ -1,0 +1,95 @@
+"""Snapshot/restore plumbing for crash-resumable fleet sweeps.
+
+Two granularities:
+
+- **Mid-run** (in-process): ``FleetSimulator(snapshot_every=...)``
+  captures full-fidelity ``FleetSnapshot``s — a deepcopy of the whole
+  simulator (engines, fast-path caches, admission queues, quantile
+  windows, audit ``_rev``) at decision-point boundaries.
+  ``FleetSnapshot.resume()`` continues the run to the horizon and
+  produces results bit-identical to the uninterrupted run;
+  ``fork()`` keeps the snapshot reusable (what-if branches). Re-exported
+  from ``core/fleet.py``.
+
+- **Across processes** (sweep-point granularity): a long ``fig9_cluster``
+  sweep writes ``SweepState`` after each completed fleet size, with the
+  same atomic-commit discipline as ``checkpoint/manager.py`` (write to
+  ``.tmp``, ``os.replace`` into place) so a crash mid-write never yields
+  a state file ``load_sweep_state`` would pick up. Restarting with
+  ``--resume`` skips completed points and reproduces their recorded
+  results exactly (the simulation is deterministic, so re-running and
+  resuming agree bit for bit — guarded by ``benchmarks/chaos_smoke.py``).
+"""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from ..core.fleet import FleetSnapshot
+
+__all__ = ["FleetSnapshot", "SweepState", "save_sweep_state",
+           "load_sweep_state"]
+
+_SCHEMA = 1
+
+
+@dataclass
+class SweepState:
+    """Completed points of a parameter sweep, keyed by point label
+    (e.g. the fleet size as a string). ``meta`` pins the sweep identity
+    — seed, knobs — so ``--resume`` refuses to mix incompatible runs."""
+
+    meta: Dict = field(default_factory=dict)
+    points: Dict[str, Dict] = field(default_factory=dict)
+
+    def done(self, label) -> bool:
+        return str(label) in self.points
+
+    def record(self, label, result: Dict) -> None:
+        self.points[str(label)] = result
+
+    def ordered(self) -> List[Dict]:
+        return [self.points[k] for k in sorted(self.points, key=_point_key)]
+
+
+def _point_key(k: str):
+    try:
+        return (0, float(k), k)
+    except ValueError:
+        return (1, 0.0, k)
+
+
+def save_sweep_state(path: str, state: SweepState) -> None:
+    """Atomic commit: serialize to ``<path>.tmp`` then rename into
+    place, so readers only ever see a complete state file."""
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump({"schema": _SCHEMA, "meta": state.meta,
+                   "points": state.points}, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
+
+
+def load_sweep_state(path: str,
+                     meta: Optional[Dict] = None) -> Optional[SweepState]:
+    """Load a sweep state, or ``None`` when the file does not exist.
+    When ``meta`` is given, a state whose pinned identity differs raises
+    (resuming a sweep with different knobs would silently mix results).
+    Corrupt files raise ``ValueError`` with the path in the message."""
+    if not os.path.exists(path):
+        return None
+    try:
+        with open(path) as f:
+            d = json.load(f)
+    except (json.JSONDecodeError, OSError) as e:
+        raise ValueError(f"corrupt sweep state {path!r}: {e}") from e
+    if d.get("schema") != _SCHEMA:
+        raise ValueError(f"sweep state {path!r} has unsupported schema "
+                         f"{d.get('schema')!r} (expected {_SCHEMA})")
+    state = SweepState(meta=d.get("meta", {}), points=d.get("points", {}))
+    if meta is not None and state.meta and state.meta != meta:
+        raise ValueError(
+            f"sweep state {path!r} was produced with different settings "
+            f"({state.meta!r} != {meta!r}); delete it or drop --resume")
+    return state

@@ -40,6 +40,8 @@ class Request:
     first_token_t: Optional[float] = None
     done_t: Optional[float] = None
     tokens: List[int] = field(default_factory=list)
+    deadline: Optional[float] = None      # absolute engine-clock cutoff
+    shed: bool = False                    # dropped past its deadline
 
     @property
     def done(self) -> bool:
@@ -48,11 +50,12 @@ class Request:
     @property
     def ttft(self) -> Optional[float]:
         return (self.first_token_t - self.submit_t
-                if self.first_token_t else None)
+                if self.first_token_t is not None else None)
 
     @property
     def latency(self) -> Optional[float]:
-        return self.done_t - self.submit_t if self.done_t else None
+        return (self.done_t - self.submit_t
+                if self.done_t is not None else None)
 
 
 @dataclass(frozen=True)
@@ -60,20 +63,26 @@ class ServingConfig:
     capacity: int = 4                     # decode slots
     max_len: int = 256                    # per-slot KV capacity
     greedy: bool = True
+    request_timeout: Optional[float] = None   # default per-request deadline
 
 
 class ServingEngine:
     def __init__(self, model: TransformerLM, params, scfg: ServingConfig,
                  best_effort_hook: Optional[Callable[[], None]] = None,
-                 obs: Any = None):
+                 obs: Any = None,
+                 clock: Callable[[], float] = time.monotonic):
         self.model = model
         self.params = params
         self.scfg = scfg
         self.cfg = model.cfg
         self.queue: Deque[Request] = deque()
         self.done: List[Request] = []
+        self.shed_requests: List[Request] = []
         self.be_hook = best_effort_hook
         self.be_quanta = 0
+        # injectable clock: tests drive deadlines deterministically with
+        # a fake clock; production uses the wall monotonic clock
+        self._clock = clock
         # optional telemetry (repro.obs.ObsHub or a ServingProbe);
         # observation-only and opt-in, same contract as the simulator
         if obs is not None and hasattr(obs, "serving"):
@@ -115,10 +124,16 @@ class ServingEngine:
     # -- public API --------------------------------------------------------------
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
-               eos_id: Optional[int] = None) -> Request:
-        req = Request(rid=len(self.done) + len(self.queue),
+               eos_id: Optional[int] = None,
+               timeout: Optional[float] = None) -> Request:
+        now = self._clock()
+        t_out = timeout if timeout is not None else self.scfg.request_timeout
+        req = Request(rid=len(self.done) + len(self.shed_requests)
+                      + len(self.queue) + self.n_active,
                       prompt=np.asarray(prompt, np.int32),
-                      max_new_tokens=max_new_tokens, eos_id=eos_id)
+                      max_new_tokens=max_new_tokens, eos_id=eos_id,
+                      submit_t=now,
+                      deadline=None if t_out is None else now + t_out)
         self.queue.append(req)
         return req
 
@@ -139,7 +154,7 @@ class ServingEngine:
         self._insert_slot(slot, cache)
         first = int(jnp.argmax(logits[0, -1]))
         req.tokens.append(first)
-        req.first_token_t = time.monotonic()
+        req.first_token_t = self._clock()
         if self.obs is not None:
             self.obs.admitted(req.ttft)
         self._slot_req[slot] = req
@@ -151,7 +166,7 @@ class ServingEngine:
     def _retire(self, slot: int) -> None:
         req = self._slot_req[slot]
         assert req is not None
-        req.done_t = time.monotonic()
+        req.done_t = self._clock()
         if self.obs is not None:
             self.obs.retired(req.latency)
         self.done.append(req)
@@ -159,14 +174,48 @@ class ServingEngine:
         self._active[slot] = False
         self._lengths[slot] = 0
 
+    def _shed_one(self, req: Request, now: float, where: str) -> None:
+        req.shed = True
+        req.done_t = now
+        self.shed_requests.append(req)
+        if self.obs is not None and hasattr(self.obs, "shed_request"):
+            self.obs.shed_request(where)
+
+    def _shed_expired(self) -> int:
+        """Deadline enforcement, checked at every step boundary: queued
+        requests past their deadline are dropped without prefilling, and
+        slot-stuck ones (e.g. an EOS that never comes) are force-evicted
+        so the slot frees instead of being occupied forever."""
+        now = self._clock()
+        n = 0
+        if self.queue:
+            keep: Deque[Request] = deque()
+            for req in self.queue:
+                if req.deadline is not None and now >= req.deadline:
+                    self._shed_one(req, now, "queued")
+                    n += 1
+                else:
+                    keep.append(req)
+            self.queue = keep
+        for slot in np.flatnonzero(self._active):
+            req = self._slot_req[slot]
+            if req.deadline is not None and now >= req.deadline:
+                self._shed_one(req, now, "slot")
+                self._slot_req[slot] = None
+                self._active[slot] = False
+                self._lengths[slot] = 0
+                n += 1
+        return n
+
     def step(self) -> bool:
         """One engine iteration. Returns True if any work was done."""
+        shed = self._shed_expired() > 0
         # admit as many as possible (priority: serving work first)
         admitted = False
         while self._admit():
             admitted = True
         if not self._active.any():
-            if admitted:
+            if admitted or shed:
                 return True
             if self.be_hook is not None:
                 # opportunistic best-effort quantum (Fig. 4 policy at the

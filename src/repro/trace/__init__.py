@@ -17,8 +17,10 @@ workloads — the grounding loop trace-driven systems work is built on
 """
 from repro.trace.calibrate import CalibrationResult, fit_device_model
 from repro.trace.export import to_chrome, write_chrome
-from repro.trace.ingest import (KernelRecord, load_chrome, read_kernel_csv,
-                                read_kernel_json, trace_workload)
+from repro.trace.ingest import (IngestedRecords, IngestError,
+                                KernelRecord, load_chrome,
+                                read_kernel_csv, read_kernel_json,
+                                trace_workload)
 from repro.trace.recorder import TraceRecorder
 from repro.trace.replay import (TraceDiff, arrival_trace, diff_traces,
                                 replay, replay_fleet)
@@ -28,6 +30,7 @@ from repro.trace.schema import (EVENT_KINDS, JobDef, KernelDef, Trace,
 __all__ = [
     "CalibrationResult", "fit_device_model",
     "to_chrome", "write_chrome",
+    "IngestedRecords", "IngestError",
     "KernelRecord", "load_chrome", "read_kernel_csv", "read_kernel_json",
     "trace_workload",
     "TraceRecorder",

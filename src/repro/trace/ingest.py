@@ -47,6 +47,37 @@ class KernelRecord:
     bytes: float = 0.0
 
 
+class IngestError(ValueError):
+    """A malformed row/object in an external trace, located precisely:
+    ``row`` is the 1-based source row (CSV file line / JSON list index),
+    ``column`` the offending column header or object key."""
+
+    def __init__(self, message: str, *, row: Optional[int] = None,
+                 column: Optional[str] = None,
+                 path: Optional[str] = None):
+        self.row = row
+        self.column = column
+        self.path = path
+        loc = []
+        if path is not None:
+            loc.append(str(path))
+        if row is not None:
+            loc.append(f"row {row}")
+        if column is not None:
+            loc.append(f"column {column!r}")
+        prefix = f"[{', '.join(loc)}] " if loc else ""
+        super().__init__(prefix + message)
+
+
+class IngestedRecords(List[KernelRecord]):
+    """A ``KernelRecord`` list that also counts the malformed rows
+    dropped in ``strict=False`` mode."""
+
+    def __init__(self, records=(), skipped: int = 0):
+        super().__init__(records)
+        self.skipped = skipped
+
+
 # ---------------------------------------------------------------------------
 # Column / key matching helpers
 # ---------------------------------------------------------------------------
@@ -82,34 +113,59 @@ def _to_float(cell: str) -> float:
 # ---------------------------------------------------------------------------
 
 
-def read_kernel_csv(path) -> List[KernelRecord]:
-    """nsys-style kernel CSV -> sorted ``KernelRecord`` list."""
+def read_kernel_csv(path, strict: bool = True) -> IngestedRecords:
+    """nsys-style kernel CSV -> sorted ``KernelRecord`` list.
+
+    A malformed row raises ``IngestError`` carrying the 1-based file row
+    and the offending column header; with ``strict=False`` bad rows are
+    skipped and counted in the returned list's ``.skipped``."""
     with open(path, newline="") as f:
-        rows = [r for r in csv.reader(f) if r and any(c.strip() for c in r)]
+        rows = [(ln, r) for ln, r in enumerate(csv.reader(f), start=1)
+                if r and any(c.strip() for c in r)]
     if not rows:
-        raise ValueError(f"empty kernel CSV: {path}")
-    headers = rows[0]
+        raise IngestError(f"empty kernel CSV: {path}", path=str(path))
+    headers = rows[0][1]
     i_start = _find_col(headers, "start")
     i_dur = _find_col(headers, "duration", "dur")
     i_name = _find_col(headers, "name", "kernel")
     if i_start is None or i_dur is None or i_name is None:
-        raise ValueError(f"could not locate start/duration/name columns in "
-                         f"{headers!r}")
+        raise IngestError(f"could not locate start/duration/name columns "
+                          f"in {headers!r}", path=str(path),
+                          row=rows[0][0])
     s_start = _unit_of(headers[i_start])
     s_dur = _unit_of(headers[i_dur])
     grid_cols = [i for i, h in enumerate(headers)
                  if h.lower().strip().startswith(("grd", "grid"))]
+
+    def cell(row, ln, i):
+        try:
+            return _to_float(row[i])
+        except (ValueError, IndexError) as e:
+            raise IngestError(str(e), path=str(path), row=ln,
+                              column=headers[i] if i < len(headers)
+                              else f"#{i}") from e
+
     out: List[KernelRecord] = []
-    for row in rows[1:]:
-        blocks = 1
-        for i in grid_cols:
-            blocks *= max(int(_to_float(row[i])), 1)
-        out.append(KernelRecord(
-            name=row[i_name].strip(), start=_to_float(row[i_start]) * s_start,
-            duration=_to_float(row[i_dur]) * s_dur,
-            blocks=blocks if grid_cols else 0))
+    skipped = 0
+    for ln, row in rows[1:]:
+        try:
+            blocks = 1
+            for i in grid_cols:
+                blocks *= max(int(cell(row, ln, i)), 1)
+            if i_name >= len(row):
+                raise IngestError("row too short", path=str(path), row=ln,
+                                  column=headers[i_name])
+            out.append(KernelRecord(
+                name=row[i_name].strip(),
+                start=cell(row, ln, i_start) * s_start,
+                duration=cell(row, ln, i_dur) * s_dur,
+                blocks=blocks if grid_cols else 0))
+        except IngestError:
+            if strict:
+                raise
+            skipped += 1
     out.sort(key=lambda r: r.start)
-    return out
+    return IngestedRecords(out, skipped)
 
 
 _JSON_KEYS = {"name": ("name", "kernelname", "kernel"),
@@ -117,19 +173,29 @@ _JSON_KEYS = {"name": ("name", "kernelname", "kernel"),
               "duration": ("duration", "dur", "elapsed")}
 
 
-def read_kernel_json(path) -> List[KernelRecord]:
+def read_kernel_json(path, strict: bool = True) -> IngestedRecords:
     """JSON list of kernel objects (fuzzy keys, seconds unless a key ends
     in ``_ns``/``_us``/``_ms``) -> sorted ``KernelRecord`` list."""
-    with open(path) as f:
-        items = json.load(f)
+    try:
+        with open(path) as f:
+            items = json.load(f)
+    except json.JSONDecodeError as e:
+        raise IngestError(f"invalid JSON: {e}", path=str(path),
+                          row=e.lineno) from e
     if not isinstance(items, list):
-        raise ValueError(f"expected a JSON list of kernels in {path}")
-    return kernel_records_from_objects(items)
+        raise IngestError(f"expected a JSON list of kernels in {path}",
+                          path=str(path))
+    return kernel_records_from_objects(items, strict=strict, path=str(path))
 
 
-def kernel_records_from_objects(items: List[Dict[str, Any]]
-                                ) -> List[KernelRecord]:
-    """Already-parsed kernel-object list -> sorted ``KernelRecord``s."""
+def kernel_records_from_objects(items: List[Dict[str, Any]],
+                                strict: bool = True,
+                                path: Optional[str] = None
+                                ) -> IngestedRecords:
+    """Already-parsed kernel-object list -> sorted ``KernelRecord``s.
+    Malformed objects raise ``IngestError`` with the 1-based list index
+    (``row``) and the missing/bad key (``column``); ``strict=False``
+    skips and counts them instead."""
 
     def get(obj: Dict[str, Any], field: str) -> Any:
         for k, v in obj.items():
@@ -142,25 +208,44 @@ def kernel_records_from_objects(items: List[Dict[str, Any]]
         return None
 
     out = []
-    for obj in items:
-        name = get(obj, "name")
-        start = get(obj, "start")
-        dur = get(obj, "duration")
-        if name is None or start is None or dur is None:
-            raise ValueError(f"kernel object missing name/start/duration: "
-                             f"{obj!r}")
-        blocks = 1
-        found_grid = False
-        for k, v in obj.items():
-            if k.lower().startswith(("grid", "grd")):
-                blocks *= max(int(v), 1)
-                found_grid = True
-        out.append(KernelRecord(name=str(name), start=start, duration=dur,
-                                blocks=blocks if found_grid else 0,
-                                flops=float(obj.get("flops", 0.0)),
-                                bytes=float(obj.get("bytes", 0.0))))
+    skipped = 0
+    for n, obj in enumerate(items, start=1):
+        try:
+            if not isinstance(obj, dict):
+                raise IngestError(f"expected a kernel object, got "
+                                  f"{type(obj).__name__}", path=path, row=n)
+            for field_name in ("name", "start", "duration"):
+                try:
+                    val = get(obj, field_name)
+                except (TypeError, ValueError) as e:
+                    raise IngestError(f"bad value: {e}", path=path, row=n,
+                                      column=field_name) from e
+                if val is None:
+                    raise IngestError("missing field", path=path, row=n,
+                                      column=field_name)
+            name, start, dur = (get(obj, f)
+                                for f in ("name", "start", "duration"))
+            blocks = 1
+            found_grid = False
+            for k, v in obj.items():
+                if k.lower().startswith(("grid", "grd")):
+                    try:
+                        blocks *= max(int(v), 1)
+                    except (TypeError, ValueError) as e:
+                        raise IngestError(f"bad grid value: {v!r}",
+                                          path=path, row=n, column=k) from e
+                    found_grid = True
+            out.append(KernelRecord(name=str(name), start=start,
+                                    duration=dur,
+                                    blocks=blocks if found_grid else 0,
+                                    flops=float(obj.get("flops", 0.0)),
+                                    bytes=float(obj.get("bytes", 0.0))))
+        except IngestError:
+            if strict:
+                raise
+            skipped += 1
     out.sort(key=lambda r: r.start)
-    return out
+    return IngestedRecords(out, skipped)
 
 
 def load_chrome(source) -> Union[Trace, List[KernelRecord]]:
@@ -238,7 +323,8 @@ def _workload_from_jobdef(trace: Trace, job: JobDef) -> Workload:
 def trace_workload(source, *, job_id: Optional[str] = None,
                    name: Optional[str] = None, priority: int = 1,
                    kind: Optional[str] = None,
-                   dev: DeviceModel = A100) -> Workload:
+                   dev: DeviceModel = A100,
+                   strict: bool = True) -> Workload:
     """Build a ``Workload`` whose kernel stream replays a real trace.
 
     ``source`` is a recorded/ingested ``Trace`` (exact reconstruction of
@@ -264,7 +350,7 @@ def trace_workload(source, *, job_id: Optional[str] = None,
     if isinstance(source, (str, Path)):
         p = Path(source)
         if p.suffix == ".csv":
-            records = read_kernel_csv(p)
+            records = read_kernel_csv(p, strict=strict)
         else:
             # JSON, parsed once then dispatched: a Chrome trace (ours ->
             # exact Trace; foreign -> "X" records) or a bare
@@ -276,7 +362,8 @@ def trace_workload(source, *, job_id: Optional[str] = None,
                 return trace_workload(loaded, job_id=job_id)
             records = loaded
             if not records and isinstance(doc, list):
-                records = kernel_records_from_objects(doc)
+                records = kernel_records_from_objects(doc, strict=strict,
+                                                      path=str(p))
         wl_name = name or p.stem
     else:
         records = list(source)

@@ -79,3 +79,83 @@ def test_latency_metrics_populated(setup):
     r = eng.submit(np.arange(5, dtype=np.int32), max_new_tokens=3)
     eng.run_until_idle()
     assert r.done and r.ttft is not None and r.latency >= r.ttft
+
+
+class _FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_deadline_sheds_queued_requests(setup):
+    cfg, model, params = setup
+    clk = _FakeClock()
+    eng = ServingEngine(model, params, ServingConfig(capacity=1,
+                                                     max_len=48),
+                        clock=clk)
+    held = eng.submit(np.arange(4, dtype=np.int32), max_new_tokens=40)
+    starved = eng.submit(np.arange(4, dtype=np.int32), max_new_tokens=2,
+                         timeout=5.0)
+    eng.step()                       # `held` takes the only slot
+    clk.t = 6.0                      # past starved's deadline
+    eng.step()
+    assert starved.shed and starved in eng.shed_requests
+    assert starved.first_token_t is None      # dropped without prefilling
+    assert not held.shed
+    assert len(eng.queue) == 0
+
+
+def test_deadline_evicts_stuck_slot(setup):
+    cfg, model, params = setup
+    clk = _FakeClock()
+    eng = ServingEngine(model, params, ServingConfig(capacity=1,
+                                                     max_len=48),
+                        clock=clk)
+    # an EOS that never arrives: without the deadline the slot would be
+    # occupied until max_new_tokens
+    stuck = eng.submit(np.arange(4, dtype=np.int32), max_new_tokens=30,
+                       timeout=3.0)
+    eng.step()
+    assert eng.n_active == 1
+    clk.t = 4.0
+    assert eng.step()                # shed counts as work done
+    assert stuck.shed and eng.n_active == 0
+    nxt = eng.submit(np.arange(4, dtype=np.int32), max_new_tokens=2)
+    eng.run_until_idle()
+    assert nxt.done and not nxt.shed
+
+
+def test_config_default_timeout_and_probe(setup):
+    from repro.obs import ObsHub
+
+    cfg, model, params = setup
+    clk = _FakeClock()
+    hub = ObsHub()
+    eng = ServingEngine(model, params,
+                        ServingConfig(capacity=1, max_len=48,
+                                      request_timeout=2.0),
+                        obs=hub, clock=clk)
+    r1 = eng.submit(np.arange(4, dtype=np.int32), max_new_tokens=40)
+    r2 = eng.submit(np.arange(4, dtype=np.int32), max_new_tokens=2)
+    assert r1.deadline == r2.deadline == 2.0    # config default at submit
+    eng.step()
+    clk.t = 2.5
+    eng.step()
+    assert r1.shed and r2.shed       # r1 evicted from its slot, r2 queued
+    shed = hub.registry.get("tally_serving_sheds_total")
+    assert {k: c.v for k, c in shed.items()} \
+        == {("queued",): 1.0, ("slot",): 1.0}
+
+
+def test_no_deadline_never_sheds(setup):
+    cfg, model, params = setup
+    clk = _FakeClock()
+    eng = ServingEngine(model, params, ServingConfig(capacity=1,
+                                                     max_len=48),
+                        clock=clk)
+    r = eng.submit(np.arange(4, dtype=np.int32), max_new_tokens=3)
+    clk.t = 1e9
+    eng.run_until_idle()
+    assert r.done and not r.shed and eng.shed_requests == []
