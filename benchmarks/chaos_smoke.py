@@ -13,6 +13,14 @@ resilience layer guarantees:
      horizon equals the uninterrupted run bit for bit.
   3. **Auditability**: every fault the plan injected and every shed job
      in the result is reconstructable from the audit log alone.
+  4. **HP failover (PR 9)**: with a ``FailoverPolicy`` armed and a
+     *relocatable* fault plan (a rack-of-2 failure the surviving fleet
+     has HP slots to absorb — the default rack-of-4 wipes out half the
+     fleet, structurally unsurvivable for resident tenants), HP tenants
+     lose **zero** requests: every failover pairs with a restore
+     carrying the same backlog, interrupted requests replay exactly
+     once, and both cores stay byte-identical. The failover-free arms
+     above run with ``failover=None`` and are unchanged byte for byte.
 
 Writes a recovery-annotated HTML dashboard (stall bands, recovery and
 quarantine markers, resilience summary) as the CI artifact. Exit 0 on
@@ -33,7 +41,7 @@ HORIZON = 40.0
 SEED = 13
 
 
-def scenario():
+def scenario(rack_size: int = 4):
     from repro.core.workloads import cluster_workload
     from repro.resilience import chaos_plan
 
@@ -43,17 +51,18 @@ def scenario():
         resident_fraction=0.5, be_duration_frac=0.0,
         burst_jobs=8, burst_time=0.45 * HORIZON)
     plan = chaos_plan(N_DEVICES, HORIZON, seed=SEED, stalls=5,
-                      stall_duration=2.0, rack_size=4, rack_failures=1,
-                      stragglers=1, storms=1)
+                      stall_duration=2.0, rack_size=rack_size,
+                      rack_failures=1, stragglers=1, storms=1)
     return cw, plan
 
 
-def run(event_driven: bool, snapshot_every=None):
+def run(event_driven: bool, snapshot_every=None, failover=None,
+        rack_size: int = 4):
     from repro.core.fleet import FleetSimulator
     from repro.obs import ObsHub
     from repro.resilience import RecoveryPolicy, SheddingPolicy
 
-    cw, plan = scenario()
+    cw, plan = scenario(rack_size)
     hub = ObsHub()
     sim = FleetSimulator(
         N_DEVICES, "least_loaded", horizon=HORIZON, check_interval=4.0,
@@ -66,7 +75,7 @@ def run(event_driven: bool, snapshot_every=None):
         shedding=SheddingPolicy(max_requeues=4, max_queue_delay=12.0,
                                 pressure_evict=True),
         gangs=list(cw.gangs.values()),
-        snapshot_every=snapshot_every)
+        snapshot_every=snapshot_every, failover=failover)
     result = sim.run(cw.jobs)
     return sim, result, hub, plan
 
@@ -137,6 +146,64 @@ def main(argv=None) -> int:
         if needed not in audited_kinds:
             failures.append(f"scenario never exercised audit kind "
                             f"{needed!r} — tune the chaos plan")
+    # the failover-free arms must never emit the PR-9 audit kinds (the
+    # failover layer is strictly opt-in)
+    for kind in ("failover", "failover_restore"):
+        if kind in audited_kinds:
+            failures.append(f"failover=None run emitted audit kind "
+                            f"{kind!r}")
+
+    # 4. HP failover: zero request loss under a relocatable fault plan,
+    # every failover paired with a restore carrying the same backlog,
+    # interrupted requests replayed exactly once, cores byte-identical
+    from repro.resilience import FailoverPolicy
+    fo_policy = FailoverPolicy(stall_tolerance=1.5)
+    _, res_fe, hub_fe, _ = run(event_driven=True, failover=fo_policy,
+                               rack_size=2)
+    _, res_fl, hub_fl, _ = run(event_driven=False, failover=fo_policy,
+                               rack_size=2)
+    if result_fp(res_fe) != result_fp(res_fl):
+        failures.append("failover arms: cores produced different results")
+    if hub_fe.audit.fingerprint() != hub_fl.audit.fingerprint():
+        failures.append("failover arms: cores produced different audits")
+    fo = res_fe.failover or {}
+    if fo.get("requests_lost") != 0.0:
+        failures.append(f"HP tenants lost {fo.get('requests_lost')} "
+                        f"requests with failover enabled (want 0)")
+    if not fo.get("failovers"):
+        failures.append("failover arm never failed over — tune the plan")
+    if fo.get("restores") != fo.get("failovers"):
+        failures.append(f"{fo.get('failovers'):g} failovers but "
+                        f"{fo.get('restores'):g} restores")
+    fo_recs = hub_fe.audit.filter(kind="failover")
+    re_recs = hub_fe.audit.filter(kind="failover_restore")
+    for want in ("failure", "stall"):
+        if want not in {r.details["reason"] for r in fo_recs}:
+            failures.append(f"failover reason {want!r} never exercised")
+    if {r.details["warm"] for r in re_recs} != {True, False}:
+        failures.append("warm and cold restores not both exercised")
+    by_job = {}
+    for rec in re_recs:
+        by_job.setdefault(rec.job, []).append(rec)
+    for rec in fo_recs:
+        mates = by_job.get(rec.job, [])
+        mate = next((m for m in mates if m.t >= rec.t
+                     and m.details["interrupted"] ==
+                     rec.details["interrupted"]
+                     and m.details["future"] == rec.details["future"]),
+                    None)
+        if mate is None:
+            failures.append(
+                f"failover of {rec.job} at t={rec.t:.2f} has no matching "
+                f"restore with the same carried backlog")
+        else:
+            mates.remove(mate)
+    n_interrupted = sum(r.details["interrupted"] for r in re_recs)
+    if fo.get("replayed_requests") != float(n_interrupted):
+        failures.append(
+            f"{n_interrupted} interrupted requests audited but "
+            f"{fo.get('replayed_requests'):g} replays counted — replay "
+            f"is not exactly-once")
 
     r = res_e.resilience or {}
     print(f"== chaos_smoke: {N_DEVICES} devices, {HORIZON:g}s, "
@@ -147,6 +214,8 @@ def main(argv=None) -> int:
     print(f"  shed: {sorted(res_e.shed)}")
     print(f"  snapshots: {len(sim_e.snapshots)} "
           f"at {[s.taken_at for s in sim_e.snapshots]}")
+    print("  failover arm: "
+          + ", ".join(f"{k}={v:g}" for k, v in fo.items()))
 
     if args.dashboard:
         from repro.obs import render_dashboard
@@ -161,7 +230,8 @@ def main(argv=None) -> int:
             print(f"  - {f}")
         return 1
     print("\nchaos smoke passed: cores byte-identical, snapshot resume "
-          "bit-exact, all decisions audited")
+          "bit-exact, all decisions audited, HP failover lost zero "
+          "requests")
     return 0
 
 

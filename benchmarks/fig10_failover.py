@@ -1,0 +1,155 @@
+"""Fig. 10: HP failover — inference tenants that survive device faults.
+
+Three arms per fleet size on the same seeded multi-tenant scenario:
+
+- **baseline**: fault-free run (the ceiling on HP requests served);
+- **faults**: a chaos plan (transient stalls + a rack-of-2 failure)
+  with recovery/shedding but no failover — tenants on failed devices
+  are shed with their backlog;
+- **failover**: the same plan with a ``FailoverPolicy`` armed — failed
+  or stall-stuck tenants relocate through the placement policy, pay a
+  Salus-style warm/cold restore cost, and replay interrupted requests
+  exactly once.
+
+Reported per point: HP requests served in each arm, the fraction of
+fault-lost requests failover recovers (``recovered`` — 1.0 means the
+failover arm serves everything the baseline does), the worst-service
+p99 in the failover arm, and the failover counters (relocations,
+restores, replays, total restore delay). The failover arm must lose
+zero requests — the same standing contract ``benchmarks/chaos_smoke.py``
+gates in CI.
+
+    PYTHONPATH=src python -m benchmarks.fig10_failover            # 8..32
+    PYTHONPATH=src python -m benchmarks.fig10_failover --quick    # 8
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List
+
+from benchmarks.common import RESULTS, fmt_table
+
+QUICK_SIZES = (8,)
+FULL_SIZES = (8, 16, 32)
+DURATION = 40.0
+SEED = 13
+
+SCENARIO = dict(jobs_per_device=1.5, hp_fraction=0.5, hp_load=0.5,
+                gang_fraction=0.3, max_gang=3, resident_fraction=0.5,
+                be_duration_frac=0.0)
+
+
+def _arm(n_devices: int, *, duration: float, seed: int, faults: bool,
+         failover) -> tuple:
+    from repro.core.fleet import FleetSimulator
+    from repro.core.workloads import cluster_workload
+    from repro.resilience import (RecoveryPolicy, SheddingPolicy,
+                                  chaos_plan)
+
+    cw = cluster_workload(n_devices, duration=duration, seed=seed,
+                          burst_jobs=n_devices,
+                          burst_time=0.45 * duration, **SCENARIO)
+    events = []
+    if faults:
+        # rack-of-2 failures scale with the fleet; the surviving fleet
+        # keeps enough HP slots for failover to relocate into (a larger
+        # rack wipes out capacity no policy can conjure back)
+        plan = chaos_plan(n_devices, duration, seed=seed,
+                          stalls=5 * n_devices // 8, stall_duration=2.0,
+                          rack_size=2, rack_failures=n_devices // 8,
+                          stragglers=1, storms=1)
+        events = plan.events
+    sim = FleetSimulator(
+        n_devices, "least_loaded", horizon=duration, check_interval=4.0,
+        max_be_per_device=2, event_driven=True, faults=events,
+        recovery=RecoveryPolicy(backoff_base=0.4, backoff_factor=2.0,
+                                backoff_max=8.0, jitter=0.25,
+                                checkpoint_interval=3.0,
+                                breaker_threshold=3, breaker_cooldown=10.0),
+        shedding=SheddingPolicy(max_requeues=4, max_queue_delay=12.0,
+                                pressure_evict=True),
+        gangs=list(cw.gangs.values()), failover=failover)
+    result = sim.run(cw.jobs)
+    return result, len(events)
+
+
+def _hp_requests(result) -> int:
+    return sum(s.requests_done for s in result.services.values())
+
+
+def _worst_p99(result) -> float:
+    return max((s.p99 for s in result.services.values()
+                if s.requests_done), default=0.0)
+
+
+def run_point(n_devices: int, *, duration: float = DURATION,
+              seed: int = SEED) -> Dict[str, float]:
+    from repro.resilience import FailoverPolicy
+
+    t0 = time.perf_counter()
+    base, _ = _arm(n_devices, duration=duration, seed=seed, faults=False,
+                   failover=None)
+    nofo, n_faults = _arm(n_devices, duration=duration, seed=seed,
+                          faults=True, failover=None)
+    fo_res, _ = _arm(n_devices, duration=duration, seed=seed, faults=True,
+                     failover=FailoverPolicy(stall_tolerance=1.5))
+    wall = time.perf_counter() - t0
+
+    r_base, r_nofo, r_fo = (_hp_requests(base), _hp_requests(nofo),
+                            _hp_requests(fo_res))
+    gap = r_base - r_nofo
+    fo = fo_res.failover or {}
+    return {
+        "n_devices": n_devices,
+        "n_faults": n_faults,
+        "req_baseline": r_base,
+        "req_no_failover": r_nofo,
+        "req_failover": r_fo,
+        "recovered": (r_fo - r_nofo) / gap if gap > 0 else 1.0,
+        "p99_failover_ms": _worst_p99(fo_res) * 1e3,
+        "failovers": fo.get("failovers", 0.0),
+        "restores": fo.get("restores", 0.0),
+        "replayed": fo.get("replayed_requests", 0.0),
+        "requests_lost": fo.get("requests_lost", 0.0),
+        "restore_delay_s": fo.get("restore_delay_s", 0.0),
+        "wall_s": wall,
+    }
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="8-device point only (CI smoke)")
+    ap.add_argument("--output", default=str(RESULTS / "fig10_failover.json"))
+    args = ap.parse_args(argv)
+
+    sizes = QUICK_SIZES if args.quick else FULL_SIZES
+    rows: List[Dict[str, float]] = [run_point(n) for n in sizes]
+
+    lost = [r["n_devices"] for r in rows if r["requests_lost"] != 0.0]
+    if lost:
+        raise SystemExit(f"failover arm lost HP requests at {lost}-device "
+                         f"points — the zero-loss contract is broken")
+
+    print("== fig10: HP failover under device faults ==")
+    print(fmt_table(rows, ("n_devices", "n_faults", "req_baseline",
+                           "req_no_failover", "req_failover", "recovered",
+                           "p99_failover_ms", "failovers", "restores",
+                           "requests_lost"), floatfmt="{:,.2f}"))
+    worst = min(r["recovered"] for r in rows)
+    print(f"\nfailover recovers >= {worst:.0%} of fault-lost HP requests "
+          f"at every point, losing zero outstanding requests")
+
+    out = {"scenario": dict(SCENARIO, duration=DURATION, seed=SEED),
+           "points": rows}
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    with open(args.output, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {args.output}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

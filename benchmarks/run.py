@@ -35,6 +35,10 @@ PLAN = [
     ("benchmarks.fig9_cluster",
      ["--quick", "--dashboard", str(_RESULTS / "fleet_dashboard.html")],
      []),
+    # HP failover under device faults: baseline / faults / faults+failover
+    # arms per fleet size; exits nonzero if the failover arm loses any
+    # outstanding HP request (the chaos_smoke zero-loss contract)
+    ("benchmarks.fig10_failover", ["--quick"], []),
     ("benchmarks.overheads", [], []),
     ("benchmarks.trace_bench", ["--quick"], []),
 ]

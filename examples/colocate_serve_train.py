@@ -3,12 +3,21 @@ engine (continuous batching) handles bursty traffic while a best-effort
 training job consumes idle quanta — Tally's opportunistic policy at work.
 
     PYTHONPATH=src python examples/colocate_serve_train.py
+
+Add ``--chaos`` to inject a mid-run engine outage (queued requests blow
+their per-request timeout) and ``--failover`` to arm the client-side
+failover stack — timeout retries with deterministic backoff, hedged
+requests, brownout degradation — so the outage degrades latency instead
+of losing requests:
+
+    PYTHONPATH=src python examples/colocate_serve_train.py --chaos --failover
 """
 import sys
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
 
+import argparse
 import json
 
 from repro.launch.serve import serve
@@ -16,14 +25,26 @@ from repro.obs import ObsHub, prometheus_text
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--chaos", action="store_true",
+                    help="inject a mid-run serving outage")
+    ap.add_argument("--failover", action="store_true",
+                    help="timeout retries + hedging + brownout")
+    args = ap.parse_args()
     hub = ObsHub()        # live telemetry: per-request latency histograms
     out = serve("qwen2.5-14b", requests=12, capacity=4,
-                max_new_tokens=6, colocate_train=True, obs=hub)
+                max_new_tokens=6, colocate_train=True, obs=hub,
+                chaos=args.chaos, failover=args.failover)
     print(json.dumps(out, indent=1))
     print(f"\nserved {out['requests']} requests "
           f"(p99 {out['p99_ms']:.0f} ms on CPU-interpret) while the "
           f"best-effort trainer completed {out['be_quanta']} quanta "
           f"in serving idle gaps")
+    if args.chaos:
+        print(f"chaos: {out['shed']} requests lost, "
+              f"{out['retries']} timeout retries"
+              + (" (failover on)" if args.failover else
+                 " (failover off — rerun with --failover)"))
     lat = hub.registry.get("tally_serving_request_latency_seconds").child()
     ttft = hub.registry.get("tally_serving_ttft_seconds").child()
     print(f"registry view: {lat.count} requests, "

@@ -72,7 +72,7 @@ from dataclasses import dataclass, field
 from typing import Deque, Dict, List, Optional, Tuple, Union
 
 from repro.core.device_model import A100, DeviceModel
-from repro.core.metrics import WindowQuantile
+from repro.core.metrics import WindowQuantile, percentile
 from repro.core.placement import (DeviceView, PlacementPolicy,
                                   TurnaroundEstimator, get_policy)
 from repro.core.simulator import DeviceEngine, simulate
@@ -129,11 +129,13 @@ def be_job(name: str, workload: Workload, *, arrival: float = 0.0,
 
 @dataclass(frozen=True)
 class DeviceFailure:
-    """A node loss at ``time``: the device freezes at the failure instant
-    (the engine cannot detach an HP service, so its history simply ends
-    there), resident BE jobs re-enter the admission queue carrying their
+    """A node loss at ``time``: the device freezes at the failure instant,
+    resident BE jobs re-enter the admission queue carrying their
     watermarked progress (like a migration), and the device is excluded
-    from placement for the rest of the run."""
+    from placement for the rest of the run. A resident HP service's
+    history ends there — unless a ``failover=`` policy is attached, in
+    which case the service is detached with its request backlog and
+    relocated through the placement policy (``repro.resilience``)."""
 
     time: float
     device: int
@@ -215,6 +217,11 @@ class ManagedDevice:
         self.lat_seen = 0              # watermark into book latencies
         self.window = WindowQuantile(0.99)   # streaming SLO window (ring+P²)
         self.iso: Optional[_IsoRef] = None
+        # per-tenant baselines into the engine's cumulative books: both
+        # stay 0 unless an HP failover vacated this device first (a later
+        # tenant must not inherit the previous one's latencies/busy time)
+        self.hp_lat_base = 0
+        self.hp_busy_base = 0.0
         self.failed = False
         self.failed_at = float("nan")
         # resilience state (inert unless faults / a recovery policy run)
@@ -241,8 +248,13 @@ class ManagedDevice:
         run a while, declared target load before that (cold-start prior)."""
         if self.hp_job is None:
             return 0.0
+        if self.iso is None:
+            # reserved for a failover restore that has not fired yet: no
+            # measured signal exists, use the declared target load
+            return self.hp_job.load
         if now - self.hp_placed_at >= warmup:
-            return self.engine.hp_busy_fraction(since=self.hp_placed_at)
+            return self.engine.hp_busy_fraction(since=self.hp_placed_at,
+                                                base=self.hp_busy_base)
         return self.hp_job.load
 
     def feed_window(self) -> None:
@@ -364,6 +376,9 @@ class FleetResult:
     # to pre-resilience runs
     shed: List[str] = field(default_factory=list)
     resilience: Optional[Dict[str, float]] = None
+    # populated only when a failover= policy was attached (None keeps
+    # failover-free summaries and JSON byte-identical to PR-8 runs)
+    failover: Optional[Dict[str, float]] = None
 
     @property
     def cluster_goodput(self) -> float:
@@ -403,6 +418,9 @@ class FleetResult:
         if self.resilience is not None:
             for k, v in self.resilience.items():
                 out[f"resilience/{k}"] = v
+        if self.failover is not None:
+            for k, v in self.failover.items():
+                out[f"failover/{k}"] = v
         for name, s in self.services.items():
             out[f"p99_ms/{name}"] = s.p99 * 1e3
             out[f"slo_attainment/{name}"] = s.slo_attainment
@@ -436,6 +454,8 @@ class FleetResult:
         if self.resilience is not None:
             out["shed"] = list(self.shed)
             out["resilience"] = dict(self.resilience)
+        if self.failover is not None:
+            out["failover"] = dict(self.failover)
         if self.self_profile is not None:
             out["self_profile"] = self.self_profile
         if path is not None:
@@ -485,7 +505,7 @@ class FleetSimulator:
                  obs=None, event_driven: bool = True,
                  failures: Optional[List[DeviceFailure]] = None,
                  faults: Optional[List[FaultEvent]] = None,
-                 recovery=None, shedding=None,
+                 recovery=None, shedding=None, failover=None,
                  gangs: Optional[List[List[str]]] = None,
                  snapshot_every: Optional[float] = None):
         if device_models is not None and len(device_models) != n_devices:
@@ -520,10 +540,12 @@ class FleetSimulator:
             else:
                 raise TypeError(f"unknown fault event {f!r}")
         self._actions = sorted(actions)
-        # recovery / shedding policies are duck-typed (repro.resilience
-        # provides the reference implementations; core stays import-free)
+        # recovery / shedding / failover policies are duck-typed
+        # (repro.resilience provides the reference implementations; core
+        # stays import-free)
         self._recovery = recovery
         self._shedding = shedding
+        self._failover_policy = failover
         self._gang_of: Dict[str, str] = {}
         self._gang_members: Dict[str, List[str]] = {}
         for group in gangs or []:
@@ -537,7 +559,8 @@ class FleetSimulator:
                     raise ValueError(f"job {m!r} appears in two gangs")
                 self._gang_of[m] = gid
         self._resil_active = bool(faults) or recovery is not None \
-            or shedding is not None or bool(self._gang_of)
+            or shedding is not None or bool(self._gang_of) \
+            or failover is not None
         if snapshot_every is not None and not snapshot_every > 0.0:
             raise ValueError("snapshot_every must be positive")
         self.snapshot_every = snapshot_every
@@ -603,6 +626,12 @@ class FleetSimulator:
         self._n_requeues = 0
         self._n_pressure = 0
         self._n_gang_restarts = 0
+        # HP failover bookkeeping (inert without a failover= policy)
+        self._n_failovers = 0
+        self._n_restores = 0
+        self._n_replayed = 0
+        self._restore_delay_s = 0.0
+        self._hp_lost = 0                # backlog requests shed with a job
 
     # -- event-core plumbing ---------------------------------------------------
 
@@ -732,35 +761,55 @@ class FleetSimulator:
         d = self.devices[idx]
         self._sync(d, now)       # event core: engine at `now` before attach
         if job.kind == "hp_service":
-            trace = self._service_trace(job, d, now)
-            d.engine.attach_hp(job.workload, trace, offset=now,
-                               job_id=job.name)
-            d.hp_job, d.hp_placed_at = job, now
-            d.lat_seen = 0
-            d.window.reset()
-            # isolated reference: same trace on an empty device. Memoized
-            # on the exact inputs — cluster scenarios place many services
-            # sharing one workload object and trace shape (the paper
-            # replays a single MAF2 function for every service), and the
-            # baseline is deterministic given these
-            key = (id(job.workload), d.dev, self.horizon - now,
-                   self.threshold, self.fast, trace.duration,
-                   trace.arrivals.tobytes())
-            ref = _ISO_MEMO.get(key)
-            if ref is None:
-                prof = self._prof
-                if prof is not None:
-                    prof.push("iso_ref")
-                iso = simulate("tally", job.workload, [], trace, d.dev,
-                               duration=self.horizon - now,
-                               threshold=self.threshold, fast=self.fast)
-                if prof is not None:
-                    prof.pop()
-                ref = _IsoRef(p99=iso.latency.p99(),
-                              count=iso.latency.count)
-                _ISO_MEMO[key] = ref
-                _ISO_PINS[id(job.workload)] = job.workload
-            d.iso = ref
+            carry = self._hp_carry.pop(job.name, None)
+            if carry is not None:
+                # failed-over service: reserve the HP slot now, resume
+                # serving after the Salus-style restore delay (warm when
+                # this device held the service's state before). iso stays
+                # None until the restore fires — exactly the marker the
+                # SLO machinery and the event core's scheduler skip on.
+                hist = self._hp_hist[job.name]
+                warm = idx in hist["prev"]
+                delay = self._failover_policy.restore_delay(warm, d.dev)
+                d.hp_job, d.hp_placed_at = job, now
+                d.iso = None
+                self._restores[job.name] = {
+                    "at": now + delay, "idx": idx, "warm": warm,
+                    "delay": delay, "carry": carry, "job": job}
+                self._add_point(now + delay)
+            else:
+                trace = self._service_trace(job, d, now)
+                d.engine.attach_hp(job.workload, trace, offset=now,
+                                   job_id=job.name)
+                d.hp_job, d.hp_placed_at = job, now
+                d.hp_lat_base = len(d.engine.book.latency.latencies)
+                d.hp_busy_base = d.engine.ex.hp_busy_time
+                d.lat_seen = d.hp_lat_base
+                d.window.reset()
+                # isolated reference: same trace on an empty device.
+                # Memoized on the exact inputs — cluster scenarios place
+                # many services sharing one workload object and trace
+                # shape (the paper replays a single MAF2 function for
+                # every service), and the baseline is deterministic given
+                # these
+                key = (id(job.workload), d.dev, self.horizon - now,
+                       self.threshold, self.fast, trace.duration,
+                       trace.arrivals.tobytes())
+                ref = _ISO_MEMO.get(key)
+                if ref is None:
+                    prof = self._prof
+                    if prof is not None:
+                        prof.push("iso_ref")
+                    iso = simulate("tally", job.workload, [], trace, d.dev,
+                                   duration=self.horizon - now,
+                                   threshold=self.threshold, fast=self.fast)
+                    if prof is not None:
+                        prof.pop()
+                    ref = _IsoRef(p99=iso.latency.p99(),
+                                  count=iso.latency.count)
+                    _ISO_MEMO[key] = ref
+                    _ISO_PINS[id(job.workload)] = job.workload
+                d.iso = ref
         else:
             if (self._evt is not None and d.hp_job is not None
                     and d.iso is not None and not d.be_jobs
@@ -982,6 +1031,68 @@ class FleetSimulator:
                 if self._evt is not None:
                     self._evt.rev += 1
 
+    def _apply_restores(self, now: float) -> None:
+        """Fire due failover restores (reservation made in ``_place``,
+        restore delay elapsed): attach the HP service on its reserved
+        device and replay the carried backlog. Runs right after
+        ``_apply_faults`` at every decision point in both cores. No
+        revision bump — the HP slot was consumed at reservation time, so
+        placement feasibility does not change here."""
+        if not self._restores or now >= self.horizon:
+            return
+        due = sorted((res["at"], name)
+                     for name, res in self._restores.items()
+                     if res["at"] <= now)
+        for _, name in due:
+            res = self._restores.pop(name)
+            d = self.devices[res["idx"]]
+            job, carry = res["job"], res["carry"]
+            self._sync(d, now)
+            fo = self._failover_policy
+            if fo.displace_be and d.be_jobs:
+                # make room for the restored tenant: evict resident BE
+                # jobs through the shared requeue/shedding path (before
+                # the SLO pass, so _deactivated_at stays untouched — see
+                # _fault_stall)
+                displaced = []
+                for bn in list(d.be_jobs):
+                    if self._requeue_one(d, bn, now, "failover_displace"):
+                        displaced.append(bn)
+                self._rev += 1
+                if self.obs is not None:
+                    self.obs.be_preempt(now, d.index, displaced,
+                                        "failover_displace")
+                if self._evt is not None:
+                    self._evt.rev += 1
+                self._gang_restart(now, displaced)
+            eng = d.engine
+            d.hp_lat_base = len(eng.book.latency.latencies)
+            d.hp_busy_base = eng.ex.hp_busy_time
+            eng.attach_hp(job.workload, None, job_id=name)
+            # replay the carried backlog at its original arrival times:
+            # completed requests are gone for good (never replayed),
+            # interrupted ones restart from scratch exactly once, future
+            # ones fire on schedule. Past timestamps pop immediately but
+            # keep their arrival in the book, so a replayed request's
+            # latency includes the outage it survived.
+            iteration = job.workload.iteration
+            for t_arr, rid in sorted(carry["interrupted"] + carry["future"]):
+                eng.ex.add_request(t_arr, rid, iteration(rid))
+            d.hp_placed_at = now
+            d.iso = carry["iso"]
+            d.lat_seen = d.hp_lat_base
+            d.window.reset()
+            self._n_restores += 1
+            self._n_replayed += len(carry["interrupted"])
+            self._restore_delay_s += res["delay"]
+            if self.obs is not None:
+                self.obs.failover_restore(now, name, d.index, res["warm"],
+                                          res["delay"],
+                                          len(carry["interrupted"]),
+                                          len(carry["future"]))
+            if self._evt is not None:
+                self._schedule(d)
+
     def _fault_fail(self, now: float, devi: int) -> None:
         """Node loss (the PR-6 ``DeviceFailure`` semantics, now routed
         through the shared requeue path so recovery/shedding policies and
@@ -1003,6 +1114,7 @@ class FleetSimulator:
         if self._evt is not None:
             self._evt.rev += 1
             d._act_time = math.inf   # stale out any queued entry
+        self._failover_hp(d, now, "failure")
         self._gang_restart(now, requeued)
 
     def _fault_stall(self, now: float, devi: int, dur: float) -> None:
@@ -1035,6 +1147,11 @@ class FleetSimulator:
         if self._evt is not None:
             self._evt.rev += 1
             self._schedule(d)
+        fo = self._failover_policy
+        if fo is not None and dur > fo.stall_tolerance:
+            # outage too long to ride out in place: relocate the HP
+            # tenant (short stalls keep the PR-8 stay-attached semantics)
+            self._failover_hp(d, now, "stall")
         rec = self._recovery
         if (rec is not None and rec.breaker_threshold is not None
                 and d.fault_count >= rec.breaker_threshold
@@ -1087,6 +1204,52 @@ class FleetSimulator:
             self._evt.rev += 1
             self._schedule(d)
         self._gang_restart(now, requeued)
+
+    def _failover_hp(self, d: ManagedDevice, now: float,
+                     reason: str) -> None:
+        """Detach ``d``'s HP service with its request backlog and push it
+        back through the admission queue (both cores; no-op without a
+        ``failover=`` policy or without a resident HP tenant). The
+        enclosing fault handler already synced the engine and bumped the
+        placement revision."""
+        if self._failover_policy is None or d.hp_job is None:
+            return
+        job = d.hp_job
+        name = job.name
+        res = self._restores.pop(name, None)
+        if res is not None:
+            # reserved but not yet restored: there is no engine state to
+            # unwind — cancel the reservation and carry the backlog on
+            carry = res["carry"]
+        else:
+            _, interrupted, future = d.engine.detach_hp()
+            carry = {"interrupted": interrupted, "future": future,
+                     "iso": d.iso}
+            hist = self._hp_hist.setdefault(
+                name, {"segments": [], "prev": set(), "attempts": 0,
+                       "iso": d.iso, "t0": d.hp_placed_at})
+            hist["segments"].append({
+                "device": d.index, "placed_at": d.hp_placed_at,
+                "detached_at": now,
+                "latencies":
+                    d.engine.book.latency.latencies[d.hp_lat_base:]})
+        hist = self._hp_hist[name]
+        hist["prev"].add(d.index)
+        hist["attempts"] += 1
+        self._hp_carry[name] = carry
+        d.hp_job = None
+        d.iso = None
+        d.window.reset()
+        self._n_failovers += 1
+        self._pending.append(job)
+        self._note_enqueued(name, now)
+        if self._evt is not None:
+            self._evt.pending_kinds["hp_service"] += 1
+            self._schedule(d)
+        if self.obs is not None:
+            self.obs.failover(now, name, d.index, reason,
+                              len(carry["interrupted"]),
+                              len(carry["future"]), hist["attempts"])
 
     def _requeue_one(self, d: ManagedDevice, name: str, now: float,
                      reason: str) -> bool:
@@ -1184,6 +1347,10 @@ class FleetSimulator:
         self._eligible.pop(job.name, None)
         self._enqueued.pop(job.name, None)
         self._failover.pop(job.name, None)
+        carry = self._hp_carry.pop(job.name, None)
+        if carry is not None:
+            # a shed HP service drops its carried backlog for good
+            self._hp_lost += len(carry["interrupted"]) + len(carry["future"])
         if self.obs is not None:
             self.obs.shed(now, job.name, job.kind, reason, device)
 
@@ -1324,6 +1491,15 @@ class FleetSimulator:
         self._placements: List[Tuple[float, str, int]] = []
         self._departed: Dict[str, int] = {}
         self._failover: Dict[str, object] = {}
+        # HP failover run state: _hp_carry holds a detached service's
+        # request backlog while it waits in the admission queue, _restores
+        # its reserved destination until the restore delay elapses, and
+        # _hp_hist the persistent per-service history (segments already
+        # served, devices previously hosted on, failover count) the
+        # warm/cold decision and the final report read
+        self._hp_carry: Dict[str, Dict] = {}
+        self._restores: Dict[str, Dict] = {}
+        self._hp_hist: Dict[str, Dict] = {}
         self._pending: Deque[JobSpec] = deque()
         self._jobs = list(jobs)
         self._arrivals = sorted(jobs, key=lambda j: (j.arrival, j.name))
@@ -1385,6 +1561,7 @@ class FleetSimulator:
             if prof is not None:
                 prof.pop()
             self._apply_faults(t)
+            self._apply_restores(t)
             if t > 0.0:
                 if prof is not None:
                     prof.push("slo")
@@ -1451,6 +1628,7 @@ class FleetSimulator:
             if prof is not None:
                 prof.pop()
             self._apply_faults(t)
+            self._apply_restores(t)
             if t > 0.0:
                 if prof is not None:
                     prof.push("slo")
@@ -1571,12 +1749,30 @@ class FleetSimulator:
                     if d.quarantined_until > -math.inf)),
                 "lost_work_s": self._lost_work,
             }
+        if self._failover_policy is not None:
+            # requests still stranded at horizon: carries never re-placed
+            # plus restores still paying their delay when time ran out
+            lost = self._hp_lost
+            for carry in self._hp_carry.values():
+                lost += len(carry["interrupted"]) + len(carry["future"])
+            for res in self._restores.values():
+                c = res["carry"]
+                lost += len(c["interrupted"]) + len(c["future"])
+            result.failover = {
+                "failovers": float(self._n_failovers),
+                "restores": float(self._n_restores),
+                "replayed_requests": float(self._n_replayed),
+                "requests_lost": float(lost),
+                "restore_delay_s": self._restore_delay_s,
+            }
         if self.obs is not None:
             result.self_profile = self.obs.prof.report()
         return result
 
     def _service_report(self, job: JobSpec,
                         placed: Optional[Tuple[float, int]]) -> ServiceReport:
+        if self._failover_policy is not None:
+            return self._service_report_segments(job, placed)
         if placed is None:
             return ServiceReport(name=job.name, device=None,
                                  slo_factor=job.slo_factor)
@@ -1595,6 +1791,61 @@ class FleetSimulator:
             slo_attainment=good / lats.count if lats.count else 0.0,
             norm_goodput=good / iso.count if iso.count else 0.0,
             active_span=end - t0,
+        )
+
+    def _service_report_segments(
+            self, job: JobSpec,
+            placed: Optional[Tuple[float, int]]) -> ServiceReport:
+        """Failover-aware variant of ``_service_report``: a service's
+        history is the latency segments recorded at each ``_failover_hp``
+        detach plus the live tail on whichever device currently hosts it.
+        Used for *every* service when a failover policy is attached — a
+        device vacated by failover can later host a different tenant, so
+        reading a device's cumulative book is only correct per-segment."""
+        name = job.name
+        hist = self._hp_hist.get(name)
+        if placed is None and hist is None:
+            return ServiceReport(name=name, device=None,
+                                 slo_factor=job.slo_factor)
+        d_res = next((d for d in self.devices
+                      if d.hp_job is not None and d.hp_job.name == name),
+                     None)
+        lats_all: List[float] = []
+        span = 0.0
+        t0 = None
+        device = None
+        iso = None
+        if hist is not None:
+            iso = hist["iso"]
+            t0 = hist["t0"]
+            for seg in hist["segments"]:
+                lats_all.extend(seg["latencies"])
+                span += seg["detached_at"] - seg["placed_at"]
+                device = seg["device"]
+        if d_res is not None and d_res.iso is not None:
+            # live tail: serving resumed (or never interrupted)
+            lats_all.extend(
+                d_res.engine.book.latency.latencies[d_res.hp_lat_base:])
+            end = d_res.failed_at if d_res.failed else self.horizon
+            span += end - d_res.hp_placed_at
+            device = d_res.index
+            if t0 is None:
+                t0 = d_res.hp_placed_at
+            iso = d_res.iso
+        if iso is None or t0 is None:
+            return ServiceReport(name=name, device=device,
+                                 slo_factor=job.slo_factor)
+        n = len(lats_all)
+        bound = job.slo_factor * iso.p99
+        good = sum(1 for x in lats_all if x <= bound)
+        return ServiceReport(
+            name=name, device=device, placed_at=t0,
+            requests_done=n,
+            p99=percentile(lats_all, 99.0) if n else 0.0,
+            ideal_p99=iso.p99, slo_factor=job.slo_factor,
+            slo_attainment=good / n if n else 0.0,
+            norm_goodput=good / iso.count if iso.count else 0.0,
+            active_span=span,
         )
 
     def _be_report(self, job: JobSpec,

@@ -1331,6 +1331,59 @@ class DeviceEngine:
         self.sched.remove_client(client)
         return client
 
+    def detach_hp(self) -> Tuple[Client, List[Tuple[float, int]],
+                                 List[Tuple[float, int]]]:
+        """Detach the device's HP service (the fleet failover path),
+        returning ``(client, interrupted, future)`` where ``interrupted``
+        is the sorted ``(arrival, rid)`` list of requests that arrived but
+        did not complete here (they restart from scratch elsewhere — the
+        exactly-once replay contract) and ``future`` the sorted
+        ``(arrival, rid)`` list of arrivals that had not fired yet.
+
+        An in-flight HP kernel is cancelled by dropping ``inflight``: its
+        pending COMPLETE goes stale, which both engines pop silently (the
+        stale-COMPLETE invariant holds — in-flight HP launches are always
+        made by the reference machinery). The full-duration busy-time
+        credit booked at launch stays, identically in both engines.
+        Callers must detach at a decision point (right after ``advance``),
+        so the fast path's backlog/timers are already flushed."""
+        client = self.hp_client
+        if client is None:
+            raise ValueError("device hosts no HP service")
+        ex = self.ex
+        assert self._ff is None or not self._ff._backlog
+        inf = ex.inflight
+        if inf is not None and inf.kind == "hp":
+            ex.inflight = None        # pending COMPLETE event becomes stale
+        future: List[Tuple[float, int]] = []
+        kept: List[Tuple[float, int, int, Any]] = []
+        for ev in ex.events:
+            if ev[2] == ARRIVAL:
+                future.append((ev[0], ev[3][0]))
+            else:
+                kept.append(ev)
+        if future:
+            ex.events = kept
+            heapq.heapify(kept)
+            future.sort()
+        del ex._arr_times[ex._arr_i:]
+        # arrived-but-unfinished requests leave the book entirely: any
+        # not-done entry belongs to the current tenant (detach purges, so
+        # a later tenant attaches over done-only history), and purging is
+        # what keeps that invariant inductive across re-placements
+        book = self.book
+        interrupted = sorted((r.arrival, rid)
+                             for rid, r in book.requests.items()
+                             if not r.done)
+        for _, rid in interrupted:
+            del book.requests[rid]
+        self.sched.remove_client(client)
+        self.hp_client = None
+        ex.hp_client = None
+        client.queue.clear()
+        client.kernel_running = False
+        return client, interrupted, future
+
     # -- time -----------------------------------------------------------------
 
     def now(self) -> float:
@@ -1417,12 +1470,15 @@ class DeviceEngine:
 
     # -- load introspection (placement signals) --------------------------------
 
-    def hp_busy_fraction(self, since: float = 0.0) -> float:
+    def hp_busy_fraction(self, since: float = 0.0,
+                         base: float = 0.0) -> float:
         """Fraction of time since ``since`` spent running HP kernels
         (pass the service's attach time, or HP busy time accumulated on an
-        idle prefix dilutes the signal for late-placed services)."""
+        idle prefix dilutes the signal for late-placed services; ``base``
+        subtracts busy time booked by a previous tenant on a device an HP
+        failover vacated — zero everywhere else)."""
         span = self.ex.now() - since
-        return self.ex.hp_busy_time / span if span > 0 else 0.0
+        return (self.ex.hp_busy_time - base) / span if span > 0 else 0.0
 
 
 def _run_priority(policy: str, hp: Optional[Workload], bes: List[Workload],

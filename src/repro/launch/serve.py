@@ -8,6 +8,12 @@ hook — the engine-level mirror of Fig. 4 (the kernel-level path is
 
     python -m repro.launch.serve --arch qwen2.5-14b --requests 24 \
         --colocate-train
+
+Request-level resilience (PR 9): ``--chaos`` injects a mid-run outage
+(the engine blocks, queued requests blow their per-request timeout);
+``--failover`` arms the client-side failover stack — timeout retries
+with deterministic backoff, hedged requests, brownout degradation — so
+the outage degrades latency instead of losing requests.
 """
 from __future__ import annotations
 
@@ -24,13 +30,16 @@ from repro.configs.base import all_arch_names, get_config
 from repro.core.metrics import LatencyStats
 from repro.core.traffic import maf2_like_trace
 from repro.models.transformer import build_model
-from repro.serving import Request, ServingConfig, ServingEngine
+from repro.serving import (BrownoutPolicy, HedgePolicy, Request,
+                           RetryPolicy, ServingConfig, ServingEngine)
 
 
 def serve(arch: str, *, requests: int = 16, capacity: int = 4,
           max_len: int = 96, max_new_tokens: int = 8,
           colocate_train: bool = False, seed: int = 0,
-          mean_rate: float = 50.0, obs=None) -> dict:
+          mean_rate: float = 50.0, obs=None,
+          timeout: Optional[float] = None, chaos: bool = False,
+          failover: bool = False, stall_s: float = 8.0) -> dict:
     cfg = get_config(arch).reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(seed))
@@ -58,14 +67,35 @@ def serve(arch: str, *, requests: int = 16, capacity: int = 4,
             be_params, be_opt, _m = be_fn(be_params, be_opt, b)
             be_state["quanta"] += 1
 
-    engine = ServingEngine(model, params, ServingConfig(capacity, max_len),
-                           best_effort_hook=be_step, obs=obs)
+    if chaos and timeout is None:
+        # chaos without deadlines is invisible; the default budget sits
+        # above the CPU-interpret baseline p99 (queueing-dominated,
+        # seconds) but below the injected outage, so only outage victims
+        # time out
+        timeout = 6.0
+    retry = hedge = brownout = None
+    if failover and timeout is not None:
+        # thresholds scale off the request budget: retries re-arm fast,
+        # hedges fire at half a budget of queue wait, brownout only under
+        # pressure far beyond one budget (it sheds terminally)
+        retry = RetryPolicy(max_retries=3, backoff_base=0.1,
+                            backoff_factor=2.0, jitter=0.25)
+        hedge = HedgePolicy(min_delay=timeout / 2)
+        brownout = BrownoutPolicy(queue_delay=3.0 * timeout,
+                                  min_capacity=max(1, capacity // 2),
+                                  exit_delay=1.5 * timeout)
+    engine = ServingEngine(model, params,
+                           ServingConfig(capacity, max_len,
+                                         request_timeout=timeout),
+                           best_effort_hook=be_step, obs=obs,
+                           retry=retry, hedge=hedge, brownout=brownout)
     rng = np.random.default_rng(seed)
     trace = maf2_like_trace(duration=requests / mean_rate * 2,
                             mean_rate=mean_rate, seed=seed)
     arrivals = trace.arrivals[:requests]
     t0 = time.monotonic()
     submitted = 0
+    stall_after = len(arrivals) // 2 if chaos else None
     lat = LatencyStats()
     while submitted < len(arrivals) or engine.queue or engine.n_active:
         now = time.monotonic() - t0
@@ -75,6 +105,11 @@ def serve(arch: str, *, requests: int = 16, capacity: int = 4,
             engine.submit(prompt.astype(np.int32),
                           max_new_tokens=max_new_tokens)
             submitted += 1
+        if stall_after is not None and submitted >= stall_after:
+            # injected outage: the engine goes dark mid-run; everything
+            # queued/in-flight blows its per-request timeout
+            stall_after = None
+            time.sleep(stall_s)
         if not engine.step():
             time.sleep(0.001)
     for r in engine.done:
@@ -82,6 +117,9 @@ def serve(arch: str, *, requests: int = 16, capacity: int = 4,
     return {
         "arch": arch,
         "requests": len(engine.done),
+        "shed": len(engine.shed_requests),
+        "retries": sum(r.attempt for r in engine.done
+                       + engine.shed_requests),
         "p50_ms": lat.p50() * 1e3,
         "p99_ms": lat.p99() * 1e3,
         "be_quanta": be_state["quanta"],
@@ -97,10 +135,19 @@ def main(argv=None) -> int:
     ap.add_argument("--capacity", type=int, default=4)
     ap.add_argument("--max-new-tokens", type=int, default=8)
     ap.add_argument("--colocate-train", action="store_true")
+    ap.add_argument("--chaos", action="store_true",
+                    help="inject a mid-run engine outage (arms per-request "
+                         "timeouts)")
+    ap.add_argument("--failover", action="store_true",
+                    help="client-side failover stack: timeout retries, "
+                         "hedged requests, brownout degradation")
+    ap.add_argument("--timeout", type=float, default=None,
+                    help="per-request timeout in seconds")
     args = ap.parse_args(argv)
     out = serve(args.arch, requests=args.requests, capacity=args.capacity,
                 max_new_tokens=args.max_new_tokens,
-                colocate_train=args.colocate_train)
+                colocate_train=args.colocate_train, chaos=args.chaos,
+                failover=args.failover, timeout=args.timeout)
     print(json.dumps(out, indent=1))
     return 0
 

@@ -30,7 +30,12 @@ KINDS = ("placement", "admission_reject", "slo_check", "migration",
          # shed (dropped) jobs — recorded only when faults or
          # recovery/shedding policies are active, so fault-free logs are
          # byte-identical to pre-resilience runs
-         "stall", "recover", "requeue", "quarantine", "shed")
+         "stall", "recover", "requeue", "quarantine", "shed",
+         # HP failover (PR 9): an HP service detached off a faulted
+         # device with its carried request backlog, and the matching
+         # restore once the re-placement's warm/cold delay elapsed —
+         # recorded only when a failover policy is attached
+         "failover", "failover_restore")
 
 
 @dataclass

@@ -152,7 +152,14 @@ def _device_lanes(result, hub: ObsHub, *, w: int = 860,
         rec_by_dev.setdefault(r.device, []).append(r)
     for r in hub.audit.filter(kind="quarantine"):
         quar_by_dev.setdefault(r.device, []).append(r)
+    fo_by_dev: Dict[int, List] = {}
+    fre_by_dev: Dict[int, List] = {}
+    for r in hub.audit.filter(kind="failover"):
+        fo_by_dev.setdefault(r.device, []).append(r)
+    for r in hub.audit.filter(kind="failover_restore"):
+        fre_by_dev.setdefault(r.device, []).append(r)
     has_resil = bool(stall_by_dev or rec_by_dev or quar_by_dev)
+    has_fo = bool(fo_by_dev or fre_by_dev)
     for li, d in enumerate(shown):
         y = 20 + li * (lane_h + gap)
         parts.append(f'<text x="{pad - 4}" y="{y + lane_h - 4}" '
@@ -215,6 +222,29 @@ def _device_lanes(result, hub: ObsHub, *, w: int = 860,
                 f'stroke-width="2"><title>d{d.index} quarantined at '
                 f't={r.t:.2f}s ({u}, '
                 f'{r.details.get("fault_count", 0)} faults)</title></line>')
+        for r in fo_by_dev.get(d.index, ()):
+            det = r.details
+            parts.append(
+                f'<line x1="{px(r.t):.1f}" y1="{y}" '
+                f'x2="{px(r.t):.1f}" y2="{y + lane_h}" stroke="#d82f93" '
+                f'stroke-width="2"><title>HP {_esc(r.job)} failed over '
+                f'off d{d.index} at t={r.t:.2f}s '
+                f'({_esc(det.get("reason", ""))}, '
+                f'{det.get("interrupted", 0)} interrupted + '
+                f'{det.get("future", 0)} future requests carried, '
+                f'attempt {det.get("attempt", 1)})</title></line>')
+        for r in fre_by_dev.get(d.index, ()):
+            det = r.details
+            kind = "warm" if det.get("warm") else "cold"
+            parts.append(
+                f'<line x1="{px(r.t):.1f}" y1="{y}" '
+                f'x2="{px(r.t):.1f}" y2="{y + lane_h}" stroke="#2fc5d8" '
+                f'stroke-width="2" stroke-dasharray="2,2">'
+                f'<title>HP {_esc(r.job)} restored on d{d.index} at '
+                f't={r.t:.2f}s ({kind} restore, '
+                f'{det.get("delay", 0.0):.3f}s delay, replaying '
+                f'{det.get("interrupted", 0)} interrupted + '
+                f'{det.get("future", 0)} future requests)</title></line>')
         if d.failed:
             parts.append(
                 f'<line x1="{px(d.failed_at):.1f}" y1="{y}" '
@@ -240,6 +270,10 @@ def _device_lanes(result, hub: ObsHub, *, w: int = 860,
                  '</span>recovery</span>'
                  '<span><span class="swatch" style="background:#8b2fd8">'
                  '</span>quarantine</span>' if has_resil else '')
+              + ('<span><span class="swatch" style="background:#d82f93">'
+                 '</span>HP failover out</span>'
+                 '<span><span class="swatch" style="background:#2fc5d8">'
+                 '</span>HP restore in</span>' if has_fo else '')
               + '</div>')
     return "".join(parts) + legend + note
 

@@ -134,6 +134,17 @@ class ServingProbe:
         self.sheds = r.counter(
             "tally_serving_sheds_total",
             "requests shed after exceeding their deadline", ("where",))
+        # request-level robustness (PR 9): client-side retries, hedged
+        # requests, and brownout degradation transitions
+        self.retries = r.counter(
+            "tally_serving_retries_total",
+            "requests re-queued after a per-request timeout").child()
+        self.hedges = r.counter(
+            "tally_serving_hedges_total",
+            "hedged duplicate requests by outcome", ("outcome",))
+        self.brownouts = r.counter(
+            "tally_serving_brownout_transitions_total",
+            "brownout mode enter/exit transitions", ("state",))
 
     def admitted(self, ttft: float) -> None:
         self.ttft.observe(ttft)
@@ -150,6 +161,15 @@ class ServingProbe:
 
     def shed_request(self, where: str) -> None:
         self.sheds.child(where).v += 1.0
+
+    def retry(self) -> None:
+        self.retries.v += 1.0
+
+    def hedge(self, outcome: str) -> None:
+        self.hedges.child(outcome).v += 1.0
+
+    def brownout(self, state: str) -> None:
+        self.brownouts.child(state).v += 1.0
 
 
 class ObsHub:
@@ -238,6 +258,14 @@ class ObsHub:
             "tally_fleet_be_preempts_total",
             "fleet-level BE preemption events (storms, SLO pressure)",
             ("reason",))
+        # HP failover families (PR 9): children only materialize when a
+        # failover policy fires
+        self._failovers = r.counter(
+            "tally_failovers_total",
+            "HP services detached off faulted devices", ("reason",))
+        self._failover_restores = r.counter(
+            "tally_failover_restores_total",
+            "HP failover restores (serving resumed)", ("warm",))
         # end-of-run per-device gauges
         self._g_clock = r.gauge(
             "tally_device_clock_seconds", "final device clock", ("device",))
@@ -367,3 +395,25 @@ class ObsHub:
         self._be_preempts_fleet.child(reason).v += 1.0
         self.audit.record(t, "be_preempt", "", device, requeued=requeued,
                           reason=reason)
+
+    # -- HP failover hooks (fired only with a failover= policy attached) ----
+
+    def failover(self, t: float, job: str, device: int, reason: str,
+                 interrupted: int, future: int, attempt: int) -> None:
+        """An HP service left ``device`` (fault ``reason``) carrying
+        ``interrupted`` arrived-but-unfinished requests and ``future``
+        un-fired arrivals; ``attempt`` counts this service's failovers."""
+        self._failovers.child(reason).v += 1.0
+        self.audit.record(t, "failover", job, device, reason=reason,
+                          interrupted=interrupted, future=future,
+                          attempt=attempt)
+
+    def failover_restore(self, t: float, job: str, device: int, warm: bool,
+                         delay: float, interrupted: int,
+                         future: int) -> None:
+        """The matching restore: serving resumed on ``device`` after the
+        warm/cold ``delay``, replaying exactly the carried backlog."""
+        self._failover_restores.child("warm" if warm else "cold").v += 1.0
+        self.audit.record(t, "failover_restore", job, device, warm=warm,
+                          delay=delay, interrupted=interrupted,
+                          future=future)

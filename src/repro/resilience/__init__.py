@@ -1,12 +1,16 @@
 """Resilience layer: deterministic fault injection, recovery policies,
-overload shedding, and crash-resumable fleet sweeps.
+overload shedding, HP failover, and crash-resumable fleet sweeps.
 
 Everything here is opt-in — a ``FleetSimulator`` run with none of the
-``faults= / recovery= / shedding= / gangs= / snapshot_every=`` knobs is
-byte-identical to a pre-resilience run — and deterministic: seeded fault
-plans replay identically across the lockstep and event-driven fleet
-cores, every fault/recovery/shed/quarantine decision lands in the
-``AuditLog``, and a mid-run ``FleetSnapshot`` resumes bit-exactly.
+``faults= / recovery= / shedding= / gangs= / failover= /
+snapshot_every=`` knobs is byte-identical to a pre-resilience run — and
+deterministic: seeded fault plans replay identically across the lockstep
+and event-driven fleet cores, every fault/recovery/shed/quarantine/
+failover decision lands in the ``AuditLog``, and a mid-run
+``FleetSnapshot`` resumes bit-exactly. ``FailoverPolicy`` relocates HP
+inference tenants off faulted devices with a Salus-style warm/cold
+restore cost and an exactly-once replay of the interrupted request
+backlog (see ``failover.py``).
 
 Quickstart::
 
@@ -22,6 +26,7 @@ Quickstart::
                                                  max_queue_delay=20.0,
                                                  pressure_evict=True))
 """
+from .failover import FailoverPolicy
 from .faults import (BEPreemption, DeviceFailure, DeviceStall, FaultEvent,
                      FaultPlan, chaos_plan)
 from .policies import RecoveryPolicy, SheddingPolicy
@@ -31,6 +36,6 @@ from .snapshot import (FleetSnapshot, SweepState, load_sweep_state,
 __all__ = [
     "BEPreemption", "DeviceFailure", "DeviceStall", "FaultEvent",
     "FaultPlan", "chaos_plan",
-    "RecoveryPolicy", "SheddingPolicy",
+    "FailoverPolicy", "RecoveryPolicy", "SheddingPolicy",
     "FleetSnapshot", "SweepState", "load_sweep_state", "save_sweep_state",
 ]

@@ -1,0 +1,61 @@
+"""HP failover policy for the fleet simulator.
+
+Reference implementation of the duck-typed ``failover=`` knob on
+``FleetSimulator`` (same contract as ``policies.py``: the core never
+imports this package, it only relies on the attribute/method surface
+defined here; everything is deterministic by construction).
+
+With a ``FailoverPolicy`` attached, a fault hitting a device that hosts
+an HP inference service no longer strands the tenant:
+
+- a **device failure** always triggers failover; a **transient stall**
+  triggers it only when the outage exceeds ``stall_tolerance`` (short
+  stalls ride out in place — the engine clock jumps the outage and the
+  backlog drains at recovery, PR-8 semantics);
+- the service's request backlog is carried over deterministically:
+  completed requests are never replayed, the in-flight request and every
+  other arrived-but-unfinished request restart from scratch exactly
+  once, and un-fired future arrivals keep their original timestamps (so
+  a request's latency honestly includes the outage it lived through);
+- the re-placement goes through the normal placement policy, and serving
+  resumes after a Salus-style restore delay (``restore_delay``): a
+  **warm** restore (the destination hosted this service before — its
+  state is still resident) costs ``warm_restore`` seconds, a **cold**
+  one pays ``cold_overhead`` plus the time to stream
+  ``cold_restore_bytes`` of model/runtime state at the destination
+  ``DeviceModel``'s HBM bandwidth;
+- ``displace_be=True`` additionally evicts the destination's resident
+  BE jobs through the existing requeue/shedding machinery at restore
+  time (they carry watermarked progress, exactly like a migration).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+__all__ = ["FailoverPolicy"]
+
+
+@dataclass(frozen=True)
+class FailoverPolicy:
+    stall_tolerance: float = math.inf   # fail over on stalls longer than this
+    warm_restore: float = 0.05          # s: fast job switch (state resident)
+    cold_restore_bytes: float = 8e9     # state streamed on a cold restore
+    cold_overhead: float = 0.5          # s: process/runtime bring-up
+    displace_be: bool = False           # evict destination BEs at restore
+
+    def __post_init__(self) -> None:
+        if not self.stall_tolerance > 0.0:
+            raise ValueError("stall_tolerance must be positive")
+        if self.warm_restore < 0.0 or self.cold_overhead < 0.0:
+            raise ValueError("restore costs must be >= 0")
+        if self.cold_restore_bytes < 0.0:
+            raise ValueError("cold_restore_bytes must be >= 0")
+
+    def restore_delay(self, warm: bool, dev) -> float:
+        """Seconds between re-placement and serving resuming on ``dev``
+        (a ``DeviceModel``). Deterministic: a pure function of the
+        destination and whether it held this service's state before."""
+        if warm:
+            return self.warm_restore
+        return self.cold_overhead + self.cold_restore_bytes / dev.hbm_bw

@@ -76,7 +76,16 @@ def load_sweep_state(path: str,
     """Load a sweep state, or ``None`` when the file does not exist.
     When ``meta`` is given, a state whose pinned identity differs raises
     (resuming a sweep with different knobs would silently mix results).
-    Corrupt files raise ``ValueError`` with the path in the message."""
+    Corrupt files raise ``ValueError`` with the path in the message.
+
+    A resume also removes any orphaned ``<path>.tmp`` left by a process
+    that died between ``save_sweep_state``'s write and its atomic
+    ``os.replace`` — the committed file (if any) is authoritative and the
+    partial temp file must not survive to confuse a later crash
+    post-mortem or be mistaken for state."""
+    tmp = path + ".tmp"
+    if os.path.exists(tmp):
+        os.remove(tmp)
     if not os.path.exists(path):
         return None
     try:

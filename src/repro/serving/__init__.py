@@ -1,3 +1,5 @@
-from repro.serving.engine import (Request, ServingConfig, ServingEngine)
+from repro.serving.engine import (BrownoutPolicy, HedgePolicy, Request,
+                                  RetryPolicy, ServingConfig, ServingEngine)
 
-__all__ = ["Request", "ServingConfig", "ServingEngine"]
+__all__ = ["BrownoutPolicy", "HedgePolicy", "Request", "RetryPolicy",
+           "ServingConfig", "ServingEngine"]

@@ -1,0 +1,284 @@
+"""HP failover: inference tenants that survive device faults.
+
+Standing contracts guarded here (see ROADMAP):
+
+  * **Zero-loss failover**: a fault on a device hosting an HP service
+    relocates the tenant through the placement policy; completed
+    requests are never replayed, the interrupted backlog is replayed
+    exactly once (audit-reconstructable: every ``failover`` record is
+    matched by a ``failover_restore`` carrying the same backlog counts),
+    and no request is lost while a healthy device exists.
+  * **Cross-core + fast/reference determinism**: any seeded ``FaultPlan``
+    + ``FailoverPolicy`` yields byte-identical fleet results and audit
+    fingerprints on the lockstep and event-driven cores, with the fast
+    or the reference per-device engine.
+  * **Opt-in**: ``failover=None`` runs are byte-identical to the PR-8
+    resilience layer — results, audit fingerprints, no new record kinds.
+  * **Snapshot-safe**: a ``FleetSnapshot`` taken mid-failover (between
+    detach and restore) forks and resumes bit-exactly.
+"""
+import json
+import math
+
+import pytest
+
+from repro.core.fleet import FleetSimulator, be_job, hp_service
+from repro.core.workloads import paper_workload
+from repro.obs import ObsHub
+from repro.resilience import (DeviceFailure, DeviceStall, FailoverPolicy,
+                              RecoveryPolicy, SheddingPolicy, chaos_plan)
+from tests._hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+HP = paper_workload("resnet50-infer", 0)
+HP2 = paper_workload("bert-infer", 0)
+BE = paper_workload("gpt2-train", 1)
+
+
+def _result_fp(res) -> str:
+    d = res.to_json()
+    d.pop("self_profile", None)
+    return json.dumps(d, sort_keys=True)
+
+
+def _jobs(n_be: int = 2, n_hp: int = 1):
+    jobs = [hp_service(f"svc{i}", HP if i % 2 == 0 else HP2,
+                       load=0.4, seed=i) for i in range(n_hp)]
+    jobs += [be_job(f"t{i}", BE, arrival=0.5 * (i + 1))
+             for i in range(n_be)]
+    return jobs
+
+
+def _run(jobs, *, event_driven=True, obs=None, **kw):
+    kw.setdefault("max_be_per_device", 2)
+    kw.setdefault("n_devices", 3)
+    sim = FleetSimulator(kw.pop("n_devices"), "first_fit", horizon=12.0,
+                         check_interval=2.0, event_driven=event_driven,
+                         obs=obs, **kw)
+    return sim, sim.run(list(jobs))
+
+
+def _run_both(jobs, **kw):
+    hub_e, hub_l = ObsHub(), ObsHub()
+    sim_e, res_e = _run(jobs, event_driven=True, obs=hub_e, **kw)
+    sim_l, res_l = _run(jobs, event_driven=False, obs=hub_l, **kw)
+    assert _result_fp(res_e) == _result_fp(res_l)
+    assert hub_e.audit.fingerprint() == hub_l.audit.fingerprint()
+    return sim_e, res_e, hub_e
+
+
+FO = FailoverPolicy(stall_tolerance=1.5)
+
+
+# ---------------------------------------------------------------------------
+# Failover semantics
+# ---------------------------------------------------------------------------
+
+
+def test_failure_relocates_hp_and_loses_no_requests():
+    jobs = _jobs()
+    faults = [DeviceFailure(time=5.0, device=0)]
+    _, base, _ = _run_both(jobs)                       # fault-free bound
+    _, dead, _ = _run_both(jobs, faults=faults)        # PR-8: tenant dies
+    _, res, hub = _run_both(jobs, faults=faults, failover=FO)
+    svc = res.services["svc0"]
+    assert res.failover["failovers"] == 1.0
+    assert res.failover["restores"] == 1.0
+    assert res.failover["requests_lost"] == 0.0
+    # every request the fault-free run completed still completes — the
+    # carried backlog (including un-fired future arrivals) is replayed
+    assert svc.requests_done == base.services["svc0"].requests_done
+    assert svc.requests_done > dead.services["svc0"].requests_done
+    # the outage is not hidden: replayed requests keep their original
+    # arrival, so the failover run's p99 honestly includes it
+    assert svc.p99 >= base.services["svc0"].p99
+    # relocated off the failed device
+    assert svc.device != 0
+
+
+def test_short_stall_rides_out_long_stall_fails_over():
+    jobs = _jobs()
+    short = [DeviceStall(time=4.0, device=0, duration=1.0)]
+    long = [DeviceStall(time=4.0, device=0, duration=3.0)]
+    _, r_short, hub_s = _run_both(jobs, faults=short, failover=FO)
+    _, r_long, hub_l = _run_both(jobs, faults=long, failover=FO)
+    assert r_short.failover["failovers"] == 0.0        # <= stall_tolerance
+    assert not hub_s.audit.filter(kind="failover")
+    assert r_long.failover["failovers"] == 1.0         # > stall_tolerance
+    fo = hub_l.audit.filter(kind="failover")
+    assert len(fo) == 1 and fo[0].details["reason"] == "stall"
+    assert r_long.failover["requests_lost"] == 0.0
+
+
+def test_exactly_once_replay_is_audit_reconstructable():
+    """Each failover record is matched by exactly one restore replaying
+    exactly the carried backlog — interrupted work replays once, never
+    twice, and completed work never replays."""
+    jobs = _jobs()
+    _, res, hub = _run_both(jobs, faults=[DeviceFailure(time=5.0, device=0)],
+                            failover=FO)
+    fos = hub.audit.filter(kind="failover")
+    rsts = hub.audit.filter(kind="failover_restore")
+    assert len(fos) == len(rsts) == 1
+    f, r = fos[0], rsts[0]
+    assert f.job == r.job == "svc0"
+    assert r.details["interrupted"] == f.details["interrupted"]
+    assert r.details["future"] == f.details["future"]
+    assert r.t >= f.t and r.details["delay"] > 0.0
+    assert res.failover["replayed_requests"] == f.details["interrupted"]
+
+
+def test_warm_restore_cheaper_than_cold():
+    """Failing back onto a device that already hosted the service is a
+    warm restore (state resident) and must be cheaper than the first,
+    cold relocation."""
+    jobs = _jobs(n_be=0, n_hp=1)
+    faults = [DeviceFailure(time=4.0, device=0),
+              DeviceFailure(time=8.0, device=1)]
+    fo = FailoverPolicy(warm_restore=0.05, cold_overhead=0.5,
+                        cold_restore_bytes=8e9)
+    _, res, hub = _run_both(jobs, n_devices=2, faults=faults, failover=fo)
+    rsts = hub.audit.filter(kind="failover_restore")
+    # svc0: dev0 -> dev1 (cold) -> back is impossible (dev0 failed), so
+    # build the warm case explicitly below when only 2 devices exist
+    assert rsts and not rsts[0].details["warm"]
+    assert rsts[0].details["delay"] == pytest.approx(
+        0.5 + 8e9 / 1555e9)
+
+
+def test_warm_restore_on_previously_hosting_device():
+    jobs = _jobs(n_be=0, n_hp=1)
+    # stall (not fail) device 0 long enough to fail over to dev 1, then
+    # stall dev 1: dev 0 hosted the service before -> warm restore back
+    faults = [DeviceStall(time=3.0, device=0, duration=2.0),
+              DeviceStall(time=7.0, device=1, duration=2.0)]
+    _, res, hub = _run_both(jobs, n_devices=2, faults=faults, failover=FO)
+    rsts = hub.audit.filter(kind="failover_restore")
+    assert len(rsts) == 2
+    assert not rsts[0].details["warm"]          # first hop: cold
+    assert rsts[1].details["warm"]              # back onto dev 0: warm
+    assert rsts[1].details["delay"] == pytest.approx(FO.warm_restore)
+    assert rsts[1].details["delay"] < rsts[0].details["delay"]
+
+
+def test_displace_be_requeues_through_shared_machinery():
+    be_heavy = [be_job(f"t{i}", BE, arrival=0.1) for i in range(4)]
+    jobs = [hp_service("svc0", HP, load=0.4, seed=0)] + be_heavy
+    fo = FailoverPolicy(displace_be=True)
+    _, res, hub = _run_both(jobs, n_devices=2, max_be_per_device=2,
+                            faults=[DeviceFailure(time=5.0, device=0)],
+                            failover=fo)
+    disp = [r for r in hub.audit.filter(kind="be_preempt")
+            if r.details["reason"] == "failover_displace"]
+    assert len(disp) == 1 and disp[0].details["requeued"]
+    # displaced BEs went through the shared requeue path
+    req = [r for r in hub.audit.filter(kind="requeue")
+           if r.details["reason"] == "failover_displace"]
+    assert {r.job for r in req} == set(disp[0].details["requeued"])
+    assert res.failover["requests_lost"] == 0.0
+
+
+def test_no_healthy_device_defers_then_restores():
+    """With every device faulted the service waits in the admission
+    queue; once a stall clears it re-places and restores — the backlog
+    survives the wait."""
+    jobs = _jobs(n_be=0, n_hp=1)
+    faults = [DeviceStall(time=3.0, device=0, duration=4.0),
+              DeviceStall(time=3.0, device=1, duration=2.0)]
+    _, res, hub = _run_both(jobs, n_devices=2, faults=faults, failover=FO)
+    rsts = hub.audit.filter(kind="failover_restore")
+    assert len(rsts) == 1
+    assert rsts[0].t >= 5.0            # only after device 1 recovered
+    assert res.failover["requests_lost"] == 0.0
+
+
+def test_failover_under_fast_false_reference_engines():
+    jobs = _jobs(n_be=1, n_hp=1)
+    faults = [DeviceFailure(time=5.0, device=0)]
+    hub_e, hub_l = ObsHub(), ObsHub()
+    _, res_e = _run(jobs, event_driven=True, obs=hub_e, faults=faults,
+                    failover=FO, fast=False)
+    _, res_l = _run(jobs, event_driven=False, obs=hub_l, faults=faults,
+                    failover=FO, fast=False)
+    assert _result_fp(res_e) == _result_fp(res_l)
+    assert hub_e.audit.fingerprint() == hub_l.audit.fingerprint()
+    assert res_e.failover["requests_lost"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Opt-in: failover=None stays byte-identical to the PR-8 layer
+# ---------------------------------------------------------------------------
+
+
+def test_failover_none_byte_identical_to_pr8():
+    jobs = _jobs()
+    plan = chaos_plan(3, 12.0, seed=5, stalls=2, stall_duration=1.0,
+                      storms=1)
+    kw = dict(faults=plan.events,
+              recovery=RecoveryPolicy(backoff_base=0.2, jitter=0.1),
+              shedding=SheddingPolicy(max_requeues=3))
+    for event_driven in (True, False):
+        hub_a, hub_b = ObsHub(), ObsHub()
+        _, res_a = _run(jobs, event_driven=event_driven, obs=hub_a, **kw)
+        _, res_b = _run(jobs, event_driven=event_driven, obs=hub_b,
+                        failover=None, **kw)
+        assert _result_fp(res_a) == _result_fp(res_b)
+        assert hub_a.audit.fingerprint() == hub_b.audit.fingerprint()
+    assert res_a.failover is None
+    assert "failover" not in res_a.to_json()
+    new_kinds = {"failover", "failover_restore"}
+    assert not ({r.kind for r in hub_a.audit} & new_kinds)
+
+
+# ---------------------------------------------------------------------------
+# Snapshot / resume across a failover window
+# ---------------------------------------------------------------------------
+
+
+def test_snapshot_resume_bitexact_across_failover():
+    jobs = _jobs()
+    sim, res = _run(jobs, event_driven=True, snapshot_every=1.0,
+                    faults=[DeviceFailure(time=5.0, device=0)],
+                    failover=FO)
+    assert sim.snapshots
+    taken = [s.taken_at for s in sim.snapshots]
+    # at least one snapshot lands inside the detach->restore window
+    assert any(5.0 <= t < 5.6 for t in taken), taken
+    for snap in sim.snapshots:
+        resumed = snap.fork().resume()
+        assert _result_fp(resumed) == _result_fp(res), \
+            f"snapshot at t={snap.taken_at} drifted"
+
+
+# ---------------------------------------------------------------------------
+# Property: plans + failover are core-invariant (hypothesis, skip-degrading)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS,
+                    reason="hypothesis not installed (pip install '.[test]')")
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2 ** 16),
+       stalls=st.integers(min_value=0, max_value=3),
+       rack_failures=st.integers(min_value=0, max_value=1),
+       stall_tolerance=st.sampled_from([0.5, 1.5, math.inf]),
+       displace=st.booleans())
+def test_property_failover_core_invariant(seed, stalls, rack_failures,
+                                          stall_tolerance, displace):
+    plan = chaos_plan(3, 10.0, seed=seed, stalls=stalls, storms=1,
+                      rack_size=2, rack_failures=rack_failures,
+                      stall_duration=1.0)
+    fo = FailoverPolicy(stall_tolerance=stall_tolerance,
+                        displace_be=displace)
+    jobs = _jobs(n_be=2, n_hp=1)
+    kw = dict(faults=plan.events, failover=fo,
+              recovery=RecoveryPolicy(backoff_base=0.3, jitter=0.2),
+              shedding=SheddingPolicy(max_requeues=3, max_queue_delay=6.0))
+    hub_e, hub_l = ObsHub(), ObsHub()
+    sim_e, res_e = _run(jobs, event_driven=True, obs=hub_e,
+                        snapshot_every=4.0, **kw)
+    _, res_l = _run(jobs, event_driven=False, obs=hub_l, **kw)
+    assert _result_fp(res_e) == _result_fp(res_l)
+    assert hub_e.audit.fingerprint() == hub_l.audit.fingerprint()
+    if sim_e.snapshots:
+        resumed = sim_e.snapshots[0].fork().resume()
+        assert _result_fp(resumed) == _result_fp(res_e)

@@ -300,6 +300,28 @@ def test_snapshot_resume_is_single_shot_fork_is_not():
     assert _result_fp(r1) == _result_fp(r2) == _result_fp(res)
 
 
+def test_sweep_resume_cleans_orphaned_tmp(tmp_path):
+    """A process dying between the ``.tmp`` write and ``os.replace``
+    leaves a stale partial file; resume must remove it and load the
+    committed state (or None when nothing was ever committed)."""
+    import os
+    p = str(tmp_path / "sweep.state")
+    # crash before any commit: only the partial temp file exists
+    with open(p + ".tmp", "w") as f:
+        f.write('{"partial')
+    assert load_sweep_state(p) is None
+    assert not os.path.exists(p + ".tmp")
+    # crash after a successful commit: committed file is authoritative
+    st_ = SweepState(meta={"seed": 7})
+    st_.record(8, {"n_devices": 8})
+    save_sweep_state(p, st_)
+    with open(p + ".tmp", "w") as f:
+        f.write('{"partial')
+    back = load_sweep_state(p, {"seed": 7})
+    assert back is not None and back.done(8)
+    assert not os.path.exists(p + ".tmp")
+
+
 def test_sweep_state_round_trip(tmp_path):
     p = str(tmp_path / "sweep.state")
     st_ = SweepState(meta={"seed": 1})

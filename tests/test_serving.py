@@ -1,5 +1,6 @@
 """Serving engine: continuous batching parity with sequential decode,
-slot lifecycle, opportunistic best-effort hook."""
+slot lifecycle, opportunistic best-effort hook, and the request-level
+robustness layer (EDF admission, timeout retries, hedging, brownout)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,7 +8,8 @@ import pytest
 
 from repro.configs import get_config
 from repro.models.transformer import build_model
-from repro.serving import ServingConfig, ServingEngine
+from repro.serving import (BrownoutPolicy, HedgePolicy, RetryPolicy,
+                           ServingConfig, ServingEngine)
 
 
 @pytest.fixture(scope="module")
@@ -96,9 +98,9 @@ def test_deadline_sheds_queued_requests(setup):
                                                      max_len=48),
                         clock=clk)
     held = eng.submit(np.arange(4, dtype=np.int32), max_new_tokens=40)
+    eng.step()                       # `held` takes the only slot
     starved = eng.submit(np.arange(4, dtype=np.int32), max_new_tokens=2,
                          timeout=5.0)
-    eng.step()                       # `held` takes the only slot
     clk.t = 6.0                      # past starved's deadline
     eng.step()
     assert starved.shed and starved in eng.shed_requests
@@ -159,3 +161,174 @@ def test_no_deadline_never_sheds(setup):
     clk.t = 1e9
     eng.run_until_idle()
     assert r.done and not r.shed and eng.shed_requests == []
+
+
+# ---------------------------------------------------------------------------
+# Request-level robustness (PR 9): EDF admission, retries, hedging, brownout
+# ---------------------------------------------------------------------------
+
+
+def test_edf_admission_prevents_deadline_starvation(setup):
+    """Regression (two-request counterexample): under FIFO admission a
+    late-arriving tight-deadline request starves behind an earlier lax
+    one and gets shed; EDF (least deadline slack first) admits it first
+    and it completes."""
+    cfg, model, params = setup
+    clk = _FakeClock()
+    eng = ServingEngine(model, params, ServingConfig(capacity=1,
+                                                     max_len=48),
+                        clock=clk)
+    lax = eng.submit(np.arange(4, dtype=np.int32), max_new_tokens=2,
+                     timeout=100.0)
+    tight = eng.submit(np.arange(4, dtype=np.int32), max_new_tokens=2,
+                       timeout=5.0)      # later arrival, tighter deadline
+    eng.step()                           # EDF: `tight` takes the slot first
+    assert tight.done and not lax.done   # completed within its budget
+    eng.run_until_idle()
+    assert tight.done and not tight.shed
+    assert lax.done and not lax.shed     # lax still makes its lax cutoff
+
+
+def test_retry_requeues_with_deterministic_backoff(setup):
+    cfg, model, params = setup
+    clk = _FakeClock()
+    rp = RetryPolicy(max_retries=2, backoff_base=1.0, backoff_factor=2.0,
+                     backoff_max=10.0, jitter=0.0)
+    eng = ServingEngine(model, params, ServingConfig(capacity=1,
+                                                     max_len=48),
+                        clock=clk, retry=rp)
+    blocker = eng.submit(np.arange(4, dtype=np.int32), max_new_tokens=40)
+    eng.step()                           # blocker occupies the only slot
+    r = eng.submit(np.arange(4, dtype=np.int32), max_new_tokens=2,
+                   timeout=2.0)
+    clk.t = 3.0                          # r expires in queue -> retry #1
+    eng.step()
+    assert not r.shed and r.attempt == 1 and r in eng.queue
+    assert r.eligible_t == pytest.approx(3.0 + 1.0)   # backoff gate
+    assert r.deadline == pytest.approx(4.0 + 2.0)     # re-armed timeout
+    # gated: not admissible before eligible_t even with a free slot
+    while eng.n_active:                  # let the blocker finish
+        eng.step()
+    eng.step()
+    assert r not in eng.done and eng.n_active == 0
+    clk.t = 4.5                          # gate open
+    eng.run_until_idle()
+    assert r.done and not r.shed
+    assert r.latency == pytest.approx(r.done_t - 0.0)  # from original submit
+
+
+def test_retry_exhaustion_sheds_terminally(setup):
+    cfg, model, params = setup
+    clk = _FakeClock()
+    rp = RetryPolicy(max_retries=1, backoff_base=0.5, jitter=0.0)
+    eng = ServingEngine(model, params, ServingConfig(capacity=1,
+                                                     max_len=48),
+                        clock=clk, retry=rp)
+    blocker = eng.submit(np.arange(4, dtype=np.int32), max_new_tokens=40)
+    eng.step()
+    r = eng.submit(np.arange(4, dtype=np.int32), max_new_tokens=2,
+                   timeout=1.0)
+    clk.t = 1.5                          # first expiry -> retry
+    eng.step()
+    assert r.attempt == 1 and not r.shed
+    clk.t = 10.0                         # re-armed deadline also blown
+    eng.step()
+    assert r.shed and r in eng.shed_requests
+
+
+def test_hedge_spawns_and_primary_win_cancels_clone(setup):
+    from repro.obs import ObsHub
+
+    cfg, model, params = setup
+    clk = _FakeClock()
+    hub = ObsHub()
+    eng = ServingEngine(model, params, ServingConfig(capacity=2,
+                                                     max_len=48),
+                        clock=clk, obs=hub,
+                        hedge=HedgePolicy(min_delay=1.0, max_hedges=1))
+    b1 = eng.submit(np.arange(4, dtype=np.int32), max_new_tokens=3)
+    b2 = eng.submit(np.arange(4, dtype=np.int32), max_new_tokens=3)
+    eng.step()                           # both slots taken
+    r = eng.submit(np.arange(4, dtype=np.int32), max_new_tokens=2)
+    clk.t = 2.0                          # r stuck in queue past the delay
+    eng.step()
+    assert r.rid in eng._hedge_group
+    assert len(eng.queue) == 2           # primary + its hedge clone
+    eng.run_until_idle()
+    # primary admitted first (EDF rid tiebreak) and won; clone cancelled
+    assert r.done and not r.shed
+    assert sum(1 for q in eng.done if q.rid == r.rid) == 1
+    assert eng._hedge_group == {}
+    hedges = hub.registry.get("tally_serving_hedges_total")
+    assert {k: c.v for k, c in hedges.items()} \
+        == {("spawned",): 1.0, ("lost",): 1.0}
+
+
+def test_hedge_clone_wins_while_primary_backoff_gated(setup):
+    from repro.obs import ObsHub
+
+    cfg, model, params = setup
+    clk = _FakeClock()
+    hub = ObsHub()
+    eng = ServingEngine(
+        model, params, ServingConfig(capacity=1, max_len=48),
+        clock=clk, obs=hub,
+        retry=RetryPolicy(max_retries=3, backoff_base=50.0,
+                          backoff_max=100.0, jitter=0.0),
+        hedge=HedgePolicy(min_delay=1.0, max_hedges=1))
+    blocker = eng.submit(np.arange(4, dtype=np.int32), max_new_tokens=40)
+    eng.step()
+    r = eng.submit(np.arange(4, dtype=np.int32), max_new_tokens=2,
+                   timeout=2.0)
+    clk.t = 3.0                          # r times out -> gated until t=53
+    eng.step()
+    assert r.attempt == 1 and r.eligible_t == pytest.approx(53.0)
+    clk.t = 5.0                          # stuck > hedge delay -> clone
+    eng.step()
+    assert r.rid in eng._hedge_group
+    while eng.n_active:                  # drain the blocker
+        eng.step()
+    eng.run_until_idle()                 # clone admits (primary gated), wins
+    assert r.done and not r.shed and len(r.tokens) == 2
+    assert sum(1 for q in eng.done if q.rid == r.rid) == 1
+    assert r not in eng.queue            # first-wins cancelled the primary
+    hedges = hub.registry.get("tally_serving_hedges_total")
+    assert {k: c.v for k, c in hedges.items()} \
+        == {("spawned",): 1.0, ("won",): 1.0}
+
+
+def test_brownout_shrinks_batch_and_sheds_least_slack_first(setup):
+    from repro.obs import ObsHub
+
+    cfg, model, params = setup
+    clk = _FakeClock()
+    hub = ObsHub()
+    eng = ServingEngine(
+        model, params, ServingConfig(capacity=2, max_len=48),
+        clock=clk, obs=hub,
+        retry=RetryPolicy(max_retries=3, backoff_base=0.1, jitter=0.0),
+        brownout=BrownoutPolicy(queue_delay=1.0, min_capacity=1,
+                                exit_delay=0.5))
+    tight = eng.submit(np.arange(4, dtype=np.int32), max_new_tokens=2,
+                       timeout=2.0)
+    lax = eng.submit(np.arange(4, dtype=np.int32), max_new_tokens=2,
+                     timeout=50.0)
+    free1 = eng.submit(np.arange(4, dtype=np.int32), max_new_tokens=2)
+    free2 = eng.submit(np.arange(4, dtype=np.int32), max_new_tokens=2)
+    clk.t = 1.5                          # oldest wait 1.5 > queue_delay
+    eng.step()
+    assert eng.brownout_active
+    # least slack shed first (tight, then lax, then free1 by rid) until
+    # the queue fits the shrunk batch; brownout sheds are terminal even
+    # with a retry policy attached
+    assert tight.shed and lax.shed and free1.shed
+    assert tight.attempt == 0
+    shed = hub.registry.get("tally_serving_sheds_total")
+    assert {k: c.v for k, c in shed.items()} == {("brownout",): 3.0}
+    eng.run_until_idle()
+    assert free2.done and not free2.shed
+    eng.step()                           # pressure gone -> exit brownout
+    assert not eng.brownout_active
+    trans = hub.registry.get("tally_serving_brownout_transitions_total")
+    assert {k: c.v for k, c in trans.items()} \
+        == {("enter",): 1.0, ("exit",): 1.0}
