@@ -117,18 +117,42 @@ def trace_rates(d: dict, ledger: str = "trace result") -> Dict[str, float]:
     rt = d.get("round_trip")
     if rt is None:
         _tier_missing(ledger, "round_trip")
-        return {}
-    ev = rt["events"]
-    return {f"trace {stage} events/s": ev / rt[f"wall_s_{stage}"]
-            for stage in ("recorded", "export", "ingest", "replay")
-            if rt.get(f"wall_s_{stage}")}
+        out: Dict[str, float] = {}
+    else:
+        ev = rt["events"]
+        out = {f"trace {stage} events/s": ev / rt[f"wall_s_{stage}"]
+               for stage in ("recorded", "export", "ingest", "replay")
+               if rt.get(f"wall_s_{stage}")}
+    evt = d.get("export_vectorized")
+    if evt is None:
+        _tier_missing(ledger, "export_vectorized")
+    else:
+        if evt.get("wall_s_vectorized"):
+            out["trace vectorized-export events/s"] = \
+                evt["events"] / evt["wall_s_vectorized"]
+        out["trace vectorized-export speedup"] = evt["speedup"]
+    sq = d.get("sqlite_ingest")
+    if sq is None:
+        _tier_missing(ledger, "sqlite_ingest")
+    else:
+        out["trace sqlite-ingest rows/s"] = sq["rows_per_s"]
+    return out
 
 
 def trace_exact(d: dict, ledger: str = "trace result") -> Dict[str, float]:
+    out: Dict[str, float] = {}
     rt = d.get("round_trip")
-    if rt is None:
-        return {}
-    return {"trace round-trip events": rt["events"]}
+    if rt is not None:
+        out["trace round-trip events"] = rt["events"]
+    evt = d.get("export_vectorized")
+    if evt is not None:
+        # identity is asserted inside the tier too; a 0 here means the
+        # vectorized exporter's bytes diverged from the reference loop
+        out["trace vectorized-export byte-identical"] = evt["identical"]
+    sq = d.get("sqlite_ingest")
+    if sq is not None:
+        out["trace sqlite-ingest rows"] = sq["rows"]
+    return out
 
 
 def obs_overhead_failures(fresh: dict,

@@ -38,10 +38,15 @@ def make_trace(hp_name: str, load: float, duration: float, seed: int = 1):
 def run_combo(policy: str, hp_name: str, be_names: Sequence[str],
               load: float = 0.5, duration: Optional[float] = None,
               threshold: float = 0.0316e-3, quick: bool = False,
-              seed: int = 1) -> Dict[str, float]:
+              seed: int = 1, workloads: str = "paper") -> Dict[str, float]:
     dur = duration or sim_duration_for(hp_name, quick)
-    hp = paper_workload(hp_name, 0)
-    bes = [paper_workload(n, 1 + i) for i, n in enumerate(be_names)]
+    if workloads == "zoo":       # trace-driven: rebuilt from the zoo NPZs
+        from repro.trace import zoo
+        hp = zoo.workload(hp_name, 0)
+        bes = [zoo.workload(n, 1 + i) for i, n in enumerate(be_names)]
+    else:
+        hp = paper_workload(hp_name, 0)
+        bes = [paper_workload(n, 1 + i) for i, n in enumerate(be_names)]
     trace = make_trace(hp_name, load, dur, seed)
     res = run_policy(policy, hp, bes, trace, A100, duration=dur,
                      threshold=threshold)

@@ -21,15 +21,17 @@ OUT = RESULTS / "fig5"
 
 
 def run_grid(hp_names, be_names, policies=FIG5_POLICIES, load=0.5,
-             quick=False, refresh=False):
+             quick=False, refresh=False, workloads="paper"):
     rows = []
+    tag = "" if workloads == "paper" else f"__{workloads}"
     for hp in hp_names:
         for be in be_names:
             for pol in policies:
-                path = OUT / f"{hp}__{be}__{pol}.json"
+                path = OUT / f"{hp}__{be}__{pol}{tag}.json"
                 t0 = time.time()
                 row = cached(path, lambda: run_combo(
-                    pol, hp, [be], load=load, quick=quick),
+                    pol, hp, [be], load=load, quick=quick,
+                    workloads=workloads),
                     refresh=refresh)
                 rows.append(row)
                 print(f"[fig5] {hp} + {be} {pol}: "
@@ -87,11 +89,15 @@ def main(argv=None):
     ap.add_argument("--quick", action="store_true",
                     help="short-latency HP tasks only")
     ap.add_argument("--refresh", action="store_true")
+    ap.add_argument("--zoo", action="store_true",
+                    help="trace-driven: workloads reconstructed from the "
+                         "recorded zoo traces instead of synthesized")
     args = ap.parse_args(argv)
     hps = (("resnet50-infer", "bert-infer", "yolov6m-infer")
            if args.quick else INFER_NAMES)
     rows = run_grid(hps, TRAIN_NAMES, quick=args.quick,
-                    refresh=args.refresh)
+                    refresh=args.refresh,
+                    workloads="zoo" if args.zoo else "paper")
     summarize(rows)
     return rows
 

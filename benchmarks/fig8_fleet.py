@@ -43,27 +43,34 @@ MIXES = {
 }
 
 
-def build_jobs(mix: str, horizon: float) -> List[JobSpec]:
+def build_jobs(mix: str, horizon: float,
+               workloads: str = "paper") -> List[JobSpec]:
     hp_names, be_names = MIXES[mix]
+    if workloads == "zoo":       # trace-driven: rebuilt from the zoo NPZs
+        from repro.trace import zoo
+        mk = zoo.workload
+    else:
+        mk = paper_workload
     jobs: List[JobSpec] = []
     # tight SLO (5% over isolated p99) so the BE-migration path is visible
     for i, name in enumerate(hp_names):
         jobs.append(hp_service(
-            f"svc{i}-{name}", paper_workload(name, 0),
+            f"svc{i}-{name}", mk(name, 0),
             arrival=i * horizon / 16, load=0.3 + 0.1 * (i % 3),
             seed=10 + i, slo_factor=1.05))
     for i, name in enumerate(be_names):
-        jobs.append(be_job(f"be{i}-{name}", paper_workload(name, 1),
+        jobs.append(be_job(f"be{i}-{name}", mk(name, 1),
                            arrival=i * horizon / 12))
     return jobs
 
 
 def run_scenario(n_gpus: int, mix: str, policy: str,
-                 horizon: float, fast: bool = True) -> Dict[str, float]:
+                 horizon: float, fast: bool = True,
+                 workloads: str = "paper") -> Dict[str, float]:
     fleet = FleetSimulator(n_gpus, policy, horizon=horizon,
                            check_interval=horizon / 10, min_window=15,
                            fast=fast)
-    res = fleet.run(build_jobs(mix, horizon))
+    res = fleet.run(build_jobs(mix, horizon, workloads))
     # row values come from the result's own summary() (single source of
     # truth, shared with fig9 and FleetResult.to_json)
     s = res.summary()
@@ -105,21 +112,27 @@ def main(argv=None) -> dict:
                     help="add the 8-GPU tier (slower)")
     ap.add_argument("--refresh", action="store_true")
     ap.add_argument("--horizon", type=float, default=24.0)
+    ap.add_argument("--zoo", action="store_true",
+                    help="trace-driven: job workloads reconstructed from "
+                         "the recorded zoo traces instead of synthesized")
     args = ap.parse_args(argv)
 
     t0 = time.time()
     check_single_device_contract()
     sizes = (2, 4, 8) if args.full else (2, 4)
+    workloads = "zoo" if args.zoo else "paper"
 
     def compute():
         rows = []
         for n in sizes:
             for mix in MIXES:
                 for pol in PLACEMENT_POLICIES:
-                    rows.append(run_scenario(n, mix, pol, args.horizon))
+                    rows.append(run_scenario(n, mix, pol, args.horizon,
+                                             workloads=workloads))
         return rows
 
-    tag = "full" if args.full else "quick"
+    tag = ("full" if args.full else "quick") + \
+        ("_zoo" if args.zoo else "")
     rows = cached(RESULTS / f"fig8_fleet_{tag}.json", compute,
                   refresh=args.refresh)
 

@@ -128,8 +128,8 @@ def run_scale(n_devices: int, *, duration: float = 60.0,
 
 def cluster_sweep(sizes: Iterable[int], *, duration: float = 60.0,
                   seed: int = 0, snapshot_every: float = None,
-                  state_path: str = None,
-                  resume: bool = False) -> Dict[str, object]:
+                  state_path: str = None, resume: bool = False,
+                  zoo: bool = False) -> Dict[str, object]:
     """Sweep ``sizes``; with ``state_path`` the sweep is crash-resumable
     at point granularity — each completed point is committed atomically
     (``repro.resilience.save_sweep_state``), and ``resume=True`` skips
@@ -141,11 +141,16 @@ def cluster_sweep(sizes: Iterable[int], *, duration: float = 60.0,
         from repro.resilience import SweepState, load_sweep_state, \
             save_sweep_state
         meta = {"sizes": sizes, "duration": duration, "seed": seed,
-                "snapshot_every": snapshot_every}
+                "snapshot_every": snapshot_every,
+                "workloads": "zoo" if zoo else "paper"}
         if resume:
             state = load_sweep_state(state_path, meta)
         if state is None:
             state = SweepState(meta=meta)
+    extra = {}
+    if zoo:      # trace-driven: job workloads rebuilt from the zoo NPZs
+        from repro.trace import zoo as trace_zoo
+        extra["workload_fn"] = trace_zoo.workload
     rows: List[Dict[str, float]] = []
     for n in sizes:
         if state is not None and state.done(n):
@@ -154,14 +159,16 @@ def cluster_sweep(sizes: Iterable[int], *, duration: float = 60.0,
             rows.append(state.points[str(n)])
             continue
         row = run_scale(n, duration=duration, seed=seed,
-                        snapshot_every=snapshot_every, **SCENARIO)
+                        snapshot_every=snapshot_every, **SCENARIO,
+                        **extra)
         rows.append(row)
         if state is not None:
             state.record(n, row)
             save_sweep_state(state_path, state)
     peak = max((r["completions_per_s"] for r in rows), default=0.0)
     return {
-        "scenario": dict(SCENARIO, duration=duration, seed=seed),
+        "scenario": dict(SCENARIO, duration=duration, seed=seed,
+                         workloads="zoo" if zoo else "paper"),
         "points": rows,
         "peak_completions_per_s": peak,
     }
@@ -184,6 +191,10 @@ def main(argv=None) -> dict:
     ap.add_argument("--resume", action="store_true",
                     help="skip sweep points already committed to the "
                          "state file (<output>.state) from a prior run")
+    ap.add_argument("--zoo", action="store_true",
+                    help="trace-driven: cluster job workloads "
+                         "reconstructed from the recorded zoo traces "
+                         "instead of synthesized")
     args = ap.parse_args(argv)
 
     sizes = QUICK_SIZES if args.quick else FULL_SIZES
@@ -193,7 +204,8 @@ def main(argv=None) -> dict:
                   else None)
     sweep = cluster_sweep(sizes, duration=duration,
                           snapshot_every=args.snapshot_every,
-                          state_path=state_path, resume=args.resume)
+                          state_path=state_path, resume=args.resume,
+                          zoo=args.zoo)
     bad = [r["n_devices"] for r in sweep["points"]
            if r.get("resume_bitexact") is False]
     if bad:

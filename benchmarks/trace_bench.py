@@ -3,11 +3,15 @@ replay, with schema equality asserted at every hop.
 
 Measures (1) recording overhead on the fast engine (recorded vs bare
 run of the same co-location), (2) the cost of each pipeline stage
-(finish / Chrome export / re-ingest / replay), and (3) the bundled
-sample-trace ingest path. The replayed trace must be bit-identical to
-the original — this benchmark doubles as the round-trip contract check
-at benchmark scale (CI runs the ``--quick`` tier and uploads the
-exported Chrome trace as a build artifact).
+(finish / Chrome export / re-ingest / replay), (3) the bundled
+sample-trace ingest path, (4) the vectorized Chrome exporter against
+the pure-Python reference loop (file-identity asserted — both must
+produce the same bytes), and (5) streaming nsys SQLite ingestion over
+a synthetic database built on the fly (bounded-chunking asserted). The
+replayed trace must be bit-identical to the original — this benchmark
+doubles as the round-trip contract check at benchmark scale (CI runs
+the ``--quick`` tier and uploads the exported Chrome trace as a build
+artifact).
 
     PYTHONPATH=src python -m benchmarks.trace_bench            # full
     PYTHONPATH=src python -m benchmarks.trace_bench --quick    # CI smoke
@@ -29,8 +33,11 @@ from repro.core.device_model import A100
 from repro.core.simulator import simulate
 from repro.core.traffic import maf2_like_trace, scale_to_load
 from repro.core.workloads import isolated_time, paper_workload
-from repro.trace import (TraceRecorder, diff_traces, load_chrome, replay,
-                         trace_workload, write_chrome)
+from repro.trace import (TraceRecorder, diff_traces, load_chrome,
+                         read_kernel_sqlite, replay, to_chrome,
+                         trace_workload, write_chrome,
+                         write_kernel_sqlite)
+from repro.trace.schema import Trace
 from benchmarks.common import RESULTS, fmt_table
 
 SAMPLE_CSV = Path(__file__).parent.parent / "tests" / "data" \
@@ -89,6 +96,89 @@ def round_trip(duration: float, export_path: Path) -> Dict[str, float]:
         "wall_s_ingest": wall_ingest,
         "wall_s_replay": wall_replay,
         "export_bytes": float(export_path.stat().st_size),
+    }, trace
+
+
+def export_vectorized(trace: Trace, tmpdir: Path,
+                      reps: int = 3) -> Dict[str, float]:
+    """Vectorized ``write_chrome`` vs the reference pure-Python loop
+    (``to_chrome`` + ``json.dump``), byte-identical output asserted.
+    Both paths write real files without schema embedding, so the
+    comparison isolates the per-event hot loop (schema serialization is
+    common to both and unrelated to it). Best-of-``reps`` wall times —
+    the legacy loop in particular swings with machine load."""
+    legacy, fast = tmpdir / "legacy.json", tmpdir / "vectorized.json"
+    wall_new = wall_old = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        write_chrome(trace, fast, embed_schema=False)
+        wall_new = min(wall_new, time.perf_counter() - t0)
+    for _ in range(max(reps - 1, 1)):
+        t0 = time.perf_counter()
+        with open(legacy, "w") as f:
+            json.dump(to_chrome(trace, embed_schema=False), f)
+        wall_old = min(wall_old, time.perf_counter() - t0)
+    identical = legacy.read_bytes() == fast.read_bytes()
+    assert identical, "vectorized exporter output is not byte-identical"
+    return {
+        "events": float(len(trace)),
+        "wall_s_legacy": wall_old,
+        "wall_s_vectorized": wall_new,
+        "speedup": wall_old / wall_new if wall_new else float("inf"),
+        "identical": float(identical),
+    }
+
+
+def sqlite_ingest(trace: Trace, tmpdir: Path,
+                  rows_target: int) -> Dict[str, float]:
+    """Streaming nsys-SQLite ingest over a synthetic database built on
+    the fly: the round-trip trace's kernel stream, tiled in time until
+    ``rows_target`` rows. Chunking must stay bounded (the reader's own
+    stats are asserted) — this is the multi-million-row path at bench
+    scale, never committed to the repo."""
+    from repro.trace.schema import BE_LAUNCH, HP_LAUNCH
+    from repro.trace.ingest import KernelRecord
+
+    launches = np.flatnonzero(np.isin(trace.kind, (HP_LAUNCH, BE_LAUNCH)))
+    base = [KernelRecord(
+        name=trace.kernels[int(trace.kernel[i])].name,
+        start=float(trace.ts[i]),
+        duration=max(float(trace.value[i] - trace.ts[i]), 0.0),
+        blocks=trace.kernels[int(trace.kernel[i])].blocks)
+        for i in launches[:100_000]]
+    span = base[-1].start - base[0].start + 1.0
+
+    def tiled():
+        n = 0
+        tile = 0
+        while n < rows_target:
+            for r in base:
+                if n >= rows_target:
+                    return
+                yield KernelRecord(name=r.name,
+                                   start=r.start + tile * span,
+                                   duration=r.duration, blocks=r.blocks)
+                n += 1
+            tile += 1
+
+    db = tmpdir / "bench_nsys.sqlite"
+    t0 = time.perf_counter()
+    n = write_kernel_sqlite(db, tiled())
+    wall_fixture = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    recs = read_kernel_sqlite(db)
+    wall_ingest = time.perf_counter() - t0
+    assert len(recs) == n and recs.stats.rows == n
+    assert recs.stats.peak_chunk_rows <= recs.stats.chunk_size, \
+        "chunked cursor exceeded its bound"
+    return {
+        "rows": float(n),
+        "db_bytes": float(db.stat().st_size),
+        "wall_s_fixture": wall_fixture,
+        "wall_s_ingest": wall_ingest,
+        "rows_per_s": n / wall_ingest if wall_ingest else 0.0,
+        "chunks": float(recs.stats.chunks),
+        "peak_chunk_rows": float(recs.stats.peak_chunk_rows),
     }
 
 
@@ -113,19 +203,24 @@ def main(argv=None) -> dict:
 
     t0 = time.time()
     duration = 4.0 if args.quick else 20.0
-    if args.export_path:
-        export_path = Path(args.export_path)
-        export_path.parent.mkdir(parents=True, exist_ok=True)
-        rt = round_trip(duration, export_path)
-    else:
-        with tempfile.TemporaryDirectory() as td:
-            rt = round_trip(duration, Path(td) / "tally_trace.json")
+    rows_target = 250_000 if args.quick else 1_000_000
+    with tempfile.TemporaryDirectory() as td:
+        if args.export_path:
+            export_path = Path(args.export_path)
+            export_path.parent.mkdir(parents=True, exist_ok=True)
+        else:
+            export_path = Path(td) / "tally_trace.json"
+        rt, trace = round_trip(duration, export_path)
+        ev = export_vectorized(trace, Path(td))
+        sq = sqlite_ingest(trace, Path(td), rows_target)
 
     result = {
-        "schema": 1,
+        "schema": 2,
         "tier": "quick" if args.quick else "full",
         "round_trip": rt,
         "sample_ingest": sample_ingest(),
+        "export_vectorized": ev,
+        "sqlite_ingest": sq,
         "bench_wall_s": time.time() - t0,
     }
     RESULTS.mkdir(parents=True, exist_ok=True)
@@ -140,6 +235,12 @@ def main(argv=None) -> dict:
     print(f"\n{rt['events']:,.0f} events; recording overhead "
           f"{rt['recording_overhead_pct']:.1f}% over the bare fast run; "
           f"round trip bit-exact")
+    print(f"vectorized export: {ev['wall_s_vectorized']:.3f}s vs legacy "
+          f"{ev['wall_s_legacy']:.3f}s ({ev['speedup']:.1f}x, "
+          f"byte-identical)")
+    print(f"sqlite ingest: {sq['rows']:,.0f} rows in "
+          f"{sq['wall_s_ingest']:.2f}s ({sq['rows_per_s']:,.0f} rows/s, "
+          f"peak chunk {sq['peak_chunk_rows']:,.0f} rows)")
     print(f"wrote {args.output}  ({result['bench_wall_s']:.0f}s)")
     return result
 

@@ -1,0 +1,114 @@
+"""CI trace-zoo smoke: round-trip every committed Table-2 zoo trace.
+
+For each entry of the zoo (``src/repro/trace/zoo.py``) this driver
+asserts the standing invariants at once:
+
+  * **rebuild determinism** — ``zoo.build(name)`` re-records the exact
+    bits of the committed NPZ on this machine;
+  * **lossless export** — Chrome-JSON export -> re-ingest reproduces the
+    trace including metadata (and the vectorized ``write_chrome`` bytes
+    equal the reference ``to_chrome`` + ``json.dump`` bytes);
+  * **bit-exact replay on both engines** — ``replay(fast=True)`` and
+    ``replay(fast=False)`` both reproduce the recorded kernel stream
+    event for event;
+  * **fleet-core equality** — a 1-GPU fleet driven by the
+    zoo-reconstructed workloads produces identical traces on the
+    event-driven and lockstep cores (checked once per workload kind,
+    not per entry, to bound runtime).
+
+One exported Chrome trace is written to ``--export-path`` so CI can
+upload it as a build artifact.
+
+    PYTHONPATH=src python -m benchmarks.zoo_smoke \\
+        --export-path /tmp/zoo_trace.chrome.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import tempfile
+import time
+from pathlib import Path
+
+from repro.trace import load_chrome, replay, to_chrome, write_chrome, zoo
+
+
+def check_entry(name: str, tmpdir: Path) -> dict:
+    t0 = time.perf_counter()
+    committed = zoo.load(name)
+    rebuilt = zoo.build(name)
+    rebuilt.assert_equal(committed, meta=True)      # rebuild determinism
+
+    out = tmpdir / f"{name}.chrome.json"
+    write_chrome(committed, out)
+    with open(tmpdir / f"{name}.ref.json", "w") as f:
+        json.dump(to_chrome(committed), f)
+    assert out.read_bytes() == (tmpdir / f"{name}.ref.json").read_bytes(), \
+        f"{name}: vectorized exporter bytes diverged from the reference"
+    back = load_chrome(out)
+    back.assert_equal(committed, meta=True)         # lossless export
+
+    for fast in (True, False):                      # both engines
+        _, rt = replay(back, fast=fast)
+        rt.assert_equal(committed)
+    return {"name": name, "events": len(committed),
+            "bytes": out.stat().st_size,
+            "wall_s": time.perf_counter() - t0}
+
+
+def check_fleet_cores() -> None:
+    """One zoo-driven co-location (an inference service + a training
+    job) must be identical across both fleet cores, trace included."""
+    import numpy as np
+
+    from repro.core.fleet import FleetSimulator, be_job, hp_service
+    from repro.trace import TraceRecorder
+
+    traces = []
+    for event_driven in (True, False):
+        rec = TraceRecorder()
+        fleet = FleetSimulator(1, "first_fit", horizon=4.0,
+                               event_driven=event_driven, recorder=rec)
+        res = fleet.run([
+            hp_service("svc-resnet", zoo.workload("resnet50-infer", 0),
+                       load=0.3, seed=5),
+            be_job("be-gpt2", zoo.workload("gpt2-train", 1))])
+        traces.append((rec.finish(), res.summary()))
+    (ta, sa), (tb, sb) = traces
+    ta.assert_equal(tb)
+    assert sa == sb, f"fleet summaries diverged: {sa} vs {sb}"
+    assert np.isfinite(sa["cluster_goodput"])
+    print(f"fleet cores identical on zoo workloads "
+          f"({len(ta):,} events, goodput {sa['cluster_goodput']:.3f})")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--export-path", default=None,
+                    help="keep one exported Chrome trace here (the "
+                         "largest zoo entry) for artifact upload")
+    args = ap.parse_args(argv)
+
+    t0 = time.time()
+    rows = []
+    with tempfile.TemporaryDirectory() as td:
+        for name in zoo.names():
+            r = check_entry(name, Path(td))
+            rows.append(r)
+            print(f"  {r['name']:<18s} {r['events']:>7,} events  "
+                  f"{r['bytes']:>10,} B  {r['wall_s']:.2f}s  [OK]")
+        if args.export_path:
+            biggest = max(rows, key=lambda r: r["events"])["name"]
+            dst = Path(args.export_path)
+            dst.parent.mkdir(parents=True, exist_ok=True)
+            dst.write_bytes(
+                (Path(td) / f"{biggest}.chrome.json").read_bytes())
+            print(f"kept {biggest} Chrome export at {dst}")
+    check_fleet_cores()
+    print(f"zoo smoke: {len(rows)} traces round-tripped bit-exactly "
+          f"on both engines  ({time.time() - t0:.0f}s)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

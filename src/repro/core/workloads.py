@@ -57,6 +57,8 @@ class Workload:
     n_kernels: int = 1                   # kernels per iteration/request
     host_gap: float = 0.0                # host-side gap after each kernel
     iteration_time: float = 0.0          # isolated wall time per iteration
+    ingest_skipped: int = 0              # malformed source rows dropped by
+                                         # strict=False trace ingestion
     _iso_cache: Dict[str, float] = field(default_factory=dict, repr=False,
                                          compare=False)
 
@@ -357,6 +359,8 @@ def cluster_workload(n_devices: int, *, duration: float = 60.0,
                      trace_pool: int = 8,
                      burst_jobs: int = 0,
                      burst_time: Optional[float] = None,
+                     workload_fn: Optional[Callable[[str, int],
+                                                    Workload]] = None,
                      seed: int = 0) -> ClusterWorkload:
     """Generate a Philly-style multi-tenant cluster scenario.
 
@@ -375,8 +379,10 @@ def cluster_workload(n_devices: int, *, duration: float = 60.0,
     second. ``burst_jobs`` adds an overload burst — that many extra BE
     submissions landing at one instant (``burst_time``, default
     mid-run), the admission-shedding stressor of the resilience layer.
-    Everything derives from ``seed`` — same arguments, same scenario,
-    bit for bit."""
+    ``workload_fn(name, priority)`` overrides how job workloads are
+    built (default ``paper_workload``; pass ``repro.trace.zoo.workload``
+    to drive the cluster from recorded traces). Everything derives from
+    ``seed`` — same arguments, same scenario, bit for bit."""
     from repro.core.fleet import DeviceFailure, be_job, hp_service
 
     rng = np.random.default_rng(seed)
@@ -386,10 +392,12 @@ def cluster_workload(n_devices: int, *, duration: float = 60.0,
     n_resident = min(n_resident, n_jobs)
     pool: Dict[Tuple[str, int], Workload] = {}
 
+    mk = workload_fn if workload_fn is not None else paper_workload
+
     def _wl(name: str, priority: int) -> Workload:
         w = pool.get((name, priority))
         if w is None:
-            w = pool[(name, priority)] = paper_workload(name, priority)
+            w = pool[(name, priority)] = mk(name, priority)
         return w
     times = diurnal_arrivals(duration, (n_jobs - n_resident) / duration,
                              amplitude=diurnal_amplitude, period=period,

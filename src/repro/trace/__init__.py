@@ -10,31 +10,43 @@ workloads — the grounding loop trace-driven systems work is built on
                (zero-cost when off, bit-exact with the fast path)
     ingest     nsys-style CSV/JSON + Chrome-trace importers ->
                ``trace_workload``
+    sqlite     nsys SQLite (``nsys export --type sqlite``) streaming
+               reader — SQL-side aggregation, bounded memory
     replay     deterministic re-simulation of a recorded trace through any
-               policy engine + kernel-by-kernel schedule diff
-    export     Perfetto/Chrome-trace export (lossless for our own traces)
+               policy engine + kernel-by-kernel schedule diff (exact or
+               fuzzy across recompilation renames)
+    export     Perfetto/Chrome-trace export (lossless for our own traces;
+               vectorized ``chrome_json``/``write_chrome`` fast path)
     calibrate  least-squares DeviceModel roofline fit from a trace
 """
 from repro.trace.calibrate import CalibrationResult, fit_device_model
-from repro.trace.export import to_chrome, write_chrome
+from repro.trace.export import chrome_json, to_chrome, write_chrome
 from repro.trace.ingest import (IngestedRecords, IngestError,
                                 KernelRecord, load_chrome,
                                 read_kernel_csv, read_kernel_json,
                                 trace_workload)
 from repro.trace.recorder import TraceRecorder
 from repro.trace.replay import (TraceDiff, arrival_trace, diff_traces,
-                                replay, replay_fleet)
+                                edit_distance, match_kernel_names,
+                                normalize_kernel_name, replay,
+                                replay_fleet)
 from repro.trace.schema import (EVENT_KINDS, JobDef, KernelDef, Trace,
                                 decode_config, encode_config)
+from repro.trace.sqlite import (IngestStats, is_sqlite, read_kernel_sqlite,
+                                sqlite_summary, write_kernel_sqlite)
 
 __all__ = [
     "CalibrationResult", "fit_device_model",
-    "to_chrome", "write_chrome",
+    "chrome_json", "to_chrome", "write_chrome",
     "IngestedRecords", "IngestError",
     "KernelRecord", "load_chrome", "read_kernel_csv", "read_kernel_json",
     "trace_workload",
+    "IngestStats", "is_sqlite", "read_kernel_sqlite", "sqlite_summary",
+    "write_kernel_sqlite",
     "TraceRecorder",
-    "TraceDiff", "arrival_trace", "diff_traces", "replay", "replay_fleet",
+    "TraceDiff", "arrival_trace", "diff_traces", "edit_distance",
+    "match_kernel_names", "normalize_kernel_name", "replay",
+    "replay_fleet",
     "EVENT_KINDS", "JobDef", "KernelDef", "Trace",
     "decode_config", "encode_config",
 ]

@@ -104,8 +104,39 @@ def _find_col(headers: Sequence[str], *needles: str) -> Optional[int]:
     return None
 
 
+# thousands separators deleted outright: ASCII/NBSP/narrow-NBSP spaces
+# (French locale) and the Swiss apostrophe
+_THOUSANDS_WS = str.maketrans({" ": None, " ": None, " ": None,
+                               "'": None})
+
+
 def _to_float(cell: str) -> float:
-    return float(cell.replace(",", "").strip() or 0.0)
+    """Locale-tolerant numeric cell parser.
+
+    Real nsys CSV exports are locale-formatted: US exports carry comma
+    thousands groups (``1,234,567``), European locales emit decimal
+    commas (``1234,56`` / ``1.234,56``) and space/NBSP thousands groups
+    (``1 234 567``). All of these must parse to the value the profiler
+    measured; anything else raises ``ValueError`` (wrapped into a
+    located ``IngestError`` by the callers)."""
+    s = cell.strip().translate(_THOUSANDS_WS)
+    if not s:
+        return 0.0
+    if "," in s:
+        if "." in s:
+            if s.rfind(",") > s.rfind("."):
+                s = s.replace(".", "").replace(",", ".")   # 1.234,56 (EU)
+            else:
+                s = s.replace(",", "")                     # 1,234.56 (US)
+        else:
+            head, *groups = s.split(",")
+            if all(len(g) == 3 and g.isdigit() for g in groups):
+                s = s.replace(",", "")                     # 1,234,567
+            elif len(groups) == 1:
+                s = f"{head}.{groups[0]}"                  # 1234,56 (EU)
+            else:
+                raise ValueError(f"ambiguous numeric cell {cell!r}")
+    return float(s)
 
 
 # ---------------------------------------------------------------------------
@@ -306,14 +337,19 @@ def _records_to_kernels(records: Sequence[KernelRecord], dev: DeviceModel,
     return ks
 
 
-def _workload_from_jobdef(trace: Trace, job: JobDef) -> Workload:
+def _workload_from_jobdef(trace: Trace, job: JobDef,
+                          priority: Optional[int] = None) -> Workload:
+    """``priority=None`` keeps the recorded priority; the zoo passes an
+    override so a stream recorded as the (clean, BE-free) HP client can
+    re-enter a co-location as a best-effort trainer."""
     base = [SimKernel(k.name, k.flops, k.bytes, k.blocks, k.sliceable)
             for k in (trace.kernels[i] for i in job.iteration)]
 
     def iteration(idx: int) -> List[SimKernel]:
         return base
 
-    return Workload(name=job.workload, kind=job.kind, priority=job.priority,
+    return Workload(name=job.workload, kind=job.kind,
+                    priority=job.priority if priority is None else priority,
                     iteration=iteration,
                     samples_per_iteration=job.samples_per_iteration,
                     n_kernels=job.n_kernels, host_gap=job.host_gap,
@@ -329,10 +365,12 @@ def trace_workload(source, *, job_id: Optional[str] = None,
 
     ``source`` is a recorded/ingested ``Trace`` (exact reconstruction of
     the job named ``job_id``, default: the only job), a path to a kernel
-    CSV / kernel JSON / Chrome-trace JSON, or a ``KernelRecord`` list.
-    External sources become one iteration per trace span; host-side gaps
-    observed between kernels are replayed as the workload's ``host_gap``
-    (training only — inference requests are pure GPU time here).
+    CSV / kernel JSON / Chrome-trace JSON / nsys SQLite database, or a
+    ``KernelRecord`` list. External sources become one iteration per
+    trace span; host-side gaps observed between kernels are replayed as
+    the workload's ``host_gap`` (training only — inference requests are
+    pure GPU time here). Rows dropped by ``strict=False`` stay visible
+    as the returned workload's ``ingest_skipped``.
     """
     if isinstance(source, Trace):
         jobs = source.jobs
@@ -348,8 +386,11 @@ def trace_workload(source, *, job_id: Optional[str] = None,
         return _workload_from_jobdef(source, job)
 
     if isinstance(source, (str, Path)):
+        from repro.trace.sqlite import is_sqlite, read_kernel_sqlite
         p = Path(source)
-        if p.suffix == ".csv":
+        if p.suffix in (".sqlite", ".db") or is_sqlite(p):
+            records = read_kernel_sqlite(p, strict=strict)
+        elif p.suffix == ".csv":
             records = read_kernel_csv(p, strict=strict)
         else:
             # JSON, parsed once then dispatched: a Chrome trace (ours ->
@@ -383,4 +424,5 @@ def trace_workload(source, *, job_id: Optional[str] = None,
     return Workload(name=wl_name, kind=kind, priority=priority,
                     iteration=iteration, samples_per_iteration=1.0,
                     n_kernels=len(kernels), host_gap=gap,
-                    iteration_time=max(span, busy))
+                    iteration_time=max(span, busy),
+                    ingest_skipped=getattr(records, "skipped", 0))

@@ -14,11 +14,23 @@ migrations re-derive identically from the replayed job set).
 kernel-by-kernel per (device, job) stream and reports the first point
 where the schedules diverge — structurally (different kernel/kind order)
 or in time (same order, shifted clocks).
+
+Kernel names are compared **exactly** by default. Real captures of the
+same workload rarely oblige: a recompile, a driver bump, or a different
+demangler renames kernels (template arguments change, ``void `` prefixes
+appear, nvcc appends ``_123`` uniquing suffixes) without changing the
+schedule. ``diff_traces(..., fuzzy=True)`` aligns through such renames:
+names are bucketed by a normalized form (``normalize_kernel_name`` —
+template/parameter lists stripped, uniquing suffixes dropped) and
+ambiguous buckets are resolved by edit distance, so a pure rename still
+diffs as structurally identical while a genuinely different schedule
+still diverges.
 """
 from __future__ import annotations
 
+import re
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -126,6 +138,82 @@ def replay_fleet(trace: Trace, *, fast: Optional[bool] = None,
 
 _SCHED_KINDS = (HP_LAUNCH, HP_COMPLETE, BE_LAUNCH, BE_COMPLETE)
 
+_UNIQ_SUFFIX = re.compile(r"_\d+$")
+
+
+def normalize_kernel_name(name: str) -> str:
+    """Canonical form of a kernel name, stable across recompilations.
+
+    Drops the pieces compilers and demanglers churn: the ``void `` return
+    type, balanced ``<...>`` template-argument lists and ``(...)``
+    parameter lists (nested groups included), trailing ``_123`` uniquing
+    suffixes, and all whitespace. What survives is the qualified function
+    name itself — ``void ampere_gemm<float, 128>(P p)_4`` and
+    ``ampere_gemm<half, 256>`` both normalize to ``ampere_gemm``.
+    """
+    s = name.strip()
+    if s.startswith("void "):
+        s = s[5:]
+    out = []
+    depth = 0
+    for ch in s:
+        if ch in "<(":
+            depth += 1
+        elif ch in ">)":
+            if depth:
+                depth -= 1
+        elif depth == 0 and not ch.isspace():
+            out.append(ch)
+    return _UNIQ_SUFFIX.sub("", "".join(out))
+
+
+def edit_distance(a: str, b: str, *, limit: Optional[int] = None) -> int:
+    """Levenshtein distance; returns ``limit + 1`` early once the true
+    distance provably exceeds ``limit`` (keeps bucket tiebreaks cheap on
+    pathological names)."""
+    if a == b:
+        return 0
+    if len(a) < len(b):        # iterate over the shorter row
+        a, b = b, a
+    if limit is not None and len(a) - len(b) > limit:
+        return limit + 1
+    prev = list(range(len(b) + 1))
+    for i, ca in enumerate(a, 1):
+        cur = [i]
+        for j, cb in enumerate(b, 1):
+            cur.append(min(prev[j] + 1, cur[-1] + 1,
+                           prev[j - 1] + (ca != cb)))
+        if limit is not None and min(cur) > limit:
+            return limit + 1
+        prev = cur
+    return prev[-1]
+
+
+def match_kernel_names(names_a: Iterable[str], names_b: Iterable[str]
+                       ) -> Dict[str, str]:
+    """Map each kernel name of trace A onto its best trace-B counterpart.
+
+    Exact matches map to themselves; the rest are bucketed by
+    ``normalize_kernel_name`` and, within a bucket, paired with the
+    B-name at minimal edit distance (ties broken lexicographically, so
+    the mapping is deterministic). Names with no bucket counterpart are
+    left unmapped — they still compare by their own (unequal) names.
+    """
+    set_b = set(names_b)
+    buckets: Dict[str, List[str]] = {}
+    for n in sorted(set_b):
+        buckets.setdefault(normalize_kernel_name(n), []).append(n)
+    mapping: Dict[str, str] = {}
+    for n in sorted(set(names_a)):
+        if n in set_b:
+            mapping[n] = n
+            continue
+        cands = buckets.get(normalize_kernel_name(n))
+        if cands:
+            mapping[n] = min(
+                cands, key=lambda c: (edit_distance(n, c, limit=64), c))
+    return mapping
+
 
 @dataclass
 class StreamDiff:
@@ -138,12 +226,18 @@ class StreamDiff:
     len_b: int
     first_divergence: Optional[Dict[str, Any]] = None
     max_clock_skew: float = 0.0         # |ts_a - ts_b| over aligned prefix
+    renamed: int = 0                    # aligned only via fuzzy name map
 
     @property
     def identical(self) -> bool:
         return (self.first_divergence is None
                 and self.len_a == self.len_b
                 and self.max_clock_skew == 0.0)
+
+    @property
+    def match_fraction(self) -> float:
+        """Aligned events / stream length (1.0 = fully aligned)."""
+        return self.matched / max(self.len_a, self.len_b, 1)
 
 
 @dataclass
@@ -153,11 +247,24 @@ class TraceDiff:
     streams: List[StreamDiff] = field(default_factory=list)
     only_a: List[Tuple[int, str]] = field(default_factory=list)
     only_b: List[Tuple[int, str]] = field(default_factory=list)
+    fuzzy: bool = False                 # name-mapped alignment was used
+    renamed_kernels: int = 0            # A kernel names matched via map
+    unshared_events: int = 0            # events in only_a/only_b streams
 
     @property
     def identical(self) -> bool:
         return (not self.only_a and not self.only_b
                 and all(s.identical for s in self.streams))
+
+    @property
+    def match_fraction(self) -> float:
+        """Aligned events / total events (streams present in only one
+        trace count as fully unaligned)."""
+        total = sum(max(s.len_a, s.len_b) for s in self.streams) \
+            + self.unshared_events
+        if not total:
+            return 1.0
+        return sum(s.matched for s in self.streams) / total
 
     @property
     def first_divergence(self) -> Optional[Dict[str, Any]]:
@@ -168,7 +275,9 @@ class TraceDiff:
     def format(self) -> str:
         if self.identical:
             n = sum(s.matched for s in self.streams)
-            return f"schedules identical ({n} kernel events aligned)"
+            via = (f", {self.renamed_kernels} kernels matched through "
+                   f"renames" if self.renamed_kernels else "")
+            return f"schedules identical ({n} kernel events aligned{via})"
         lines = ["schedules DIVERGE:"]
         for dev, job in self.only_a:
             lines.append(f"  stream (gpu{dev}, {job}) only in trace A")
@@ -197,34 +306,57 @@ def _streams(trace: Trace) -> Dict[Tuple[int, str], List[int]]:
     return out
 
 
-def _sig(trace: Trace, i: int) -> Tuple:
-    k = trace.kernels[int(trace.kernel[i])]
-    return (int(trace.kind[i]), k.name, k.blocks)
+def _sig(trace: Trace, i: int, names: Sequence[str]) -> Tuple:
+    ki = int(trace.kernel[i])
+    return (int(trace.kind[i]), names[ki], trace.kernels[ki].blocks)
 
 
-def diff_traces(a: Trace, b: Trace, *, atol: float = 0.0) -> TraceDiff:
+def diff_traces(a: Trace, b: Trace, *, atol: float = 0.0,
+                fuzzy: bool = False) -> TraceDiff:
     """Align two recordings kernel-by-kernel.
 
     Streams are keyed by (device, job); within a stream events align
     positionally and diverge either **structurally** (different kernel or
     event kind at a position — the schedules took different branches) or
     **in time** (same structure, clocks apart by more than ``atol``).
+
+    ``fuzzy=True`` compares kernel names through ``match_kernel_names``
+    instead of exactly, so a recompilation rename (template arguments,
+    ``void `` prefixes, ``_123`` suffixes) no longer reads as a
+    structural divergence; ``.renamed_kernels`` / per-stream ``.renamed``
+    count how many alignments needed the mapping, and
+    ``.match_fraction`` summarizes alignment quality either way.
     """
+    names_a = [k.name for k in a.kernels]
+    names_b = [k.name for k in b.kernels]
+    if fuzzy:
+        nmap = match_kernel_names(names_a, names_b)
+        canon_a = [nmap.get(n, n) for n in names_a]
+    else:
+        canon_a = names_a
     sa, sb = _streams(a), _streams(b)
     diff = TraceDiff(only_a=sorted(set(sa) - set(sb)),
-                     only_b=sorted(set(sb) - set(sa)))
+                     only_b=sorted(set(sb) - set(sa)), fuzzy=fuzzy,
+                     renamed_kernels=sum(
+                         n != c for n, c in zip(names_a, canon_a)))
+    diff.unshared_events = (
+        sum(len(sa[k]) for k in diff.only_a)
+        + sum(len(sb[k]) for k in diff.only_b))
     for key in sorted(set(sa) & set(sb)):
         ia, ib = sa[key], sb[key]
         sd = StreamDiff(device=key[0], job_id=key[1], matched=0,
                         len_a=len(ia), len_b=len(ib))
         for pos, (ea, eb) in enumerate(zip(ia, ib)):
             ta, tb = float(a.ts[ea]), float(b.ts[eb])
-            if _sig(a, ea) != _sig(b, eb):
+            if _sig(a, ea, canon_a) != _sig(b, eb, names_b):
                 sd.first_divergence = {
                     "index": pos, "ts": min(ta, tb),
                     "reason": "structural (different kernel/event)",
                     "a": a.event(ea), "b": b.event(eb)}
                 break
+            if fuzzy and names_a[int(a.kernel[ea])] \
+                    != names_b[int(b.kernel[eb])]:
+                sd.renamed += 1
             skew = abs(ta - tb)
             if skew > sd.max_clock_skew:
                 sd.max_clock_skew = skew

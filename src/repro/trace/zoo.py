@@ -1,0 +1,162 @@
+"""Table-2 trace zoo: one small recorded kernel stream per paper workload.
+
+The zoo pins down what every trace-driven path in this repo runs
+against: for each workload of the paper's Table-2 suite there is one
+deterministic solo recording (inference: a single request arriving at
+t=0 under ``tally``; training: one full iteration as the only client)
+stored as a compressed NPZ under ``tests/data/zoo/``. The artifacts are
+committed, tiny, and **reproducible bit-for-bit**: ``build(name)``
+re-records the exact same trace on any machine (the rebuild-determinism
+test in ``tests/test_trace.py`` asserts it), and every zoo trace
+replays bit-exactly on both engines and both fleet cores (the CI
+``trace-zoo`` smoke round-trips them all through
+record → export → ingest → replay).
+
+Consumers:
+
+    load(name)                the recorded ``Trace``
+    records(name)             the stream as ingested ``KernelRecord``
+                              rows (the external-trace shape — what an
+                              nsys SQLite/CSV import of the same run
+                              would produce, FLOP/byte metadata kept)
+    workload(name, priority)  a replayable ``Workload`` reconstructed
+                              from the trace — ``fig5``/``fig8``/``fig9``
+                              use these to run trace-driven instead of
+                              synthetic
+    fit(name)                 ``DeviceModel`` calibrated from the
+                              ingested records of one zoo trace
+
+Set ``REPRO_ZOO_DIR`` to point the zoo somewhere else (e.g. a directory
+of real captures with the same naming scheme).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from pathlib import Path
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.device_model import A100, DeviceModel
+from repro.core.traffic import TrafficTrace
+from repro.core.workloads import (INFER_NAMES, TRAIN_NAMES, isolated_time,
+                                  paper_workload)
+from repro.trace.calibrate import CalibrationResult, fit_device_model
+from repro.trace.ingest import KernelRecord, trace_workload
+from repro.trace.recorder import TraceRecorder
+from repro.trace.schema import BE_LAUNCH, HP_LAUNCH, Trace
+
+#: the paper's Table-2 suite, inference first (HP services), then training
+ZOO_NAMES: Tuple[str, ...] = INFER_NAMES + TRAIN_NAMES
+
+_DEFAULT_DIR = Path(__file__).resolve().parents[3] / "tests" / "data" / "zoo"
+
+
+def zoo_dir() -> Path:
+    """The zoo data directory (``REPRO_ZOO_DIR`` overrides the in-repo
+    default)."""
+    return Path(os.environ.get("REPRO_ZOO_DIR", _DEFAULT_DIR))
+
+
+def names() -> Tuple[str, ...]:
+    return ZOO_NAMES
+
+
+def path(name: str, data_dir=None) -> Path:
+    if name not in ZOO_NAMES:
+        raise KeyError(f"unknown zoo trace {name!r}; known: {ZOO_NAMES}")
+    return Path(data_dir or zoo_dir()) / f"{name}.npz"
+
+
+def span(name: str, dev: DeviceModel = A100) -> float:
+    """The deterministic recording horizon for one zoo entry: enough for
+    exactly one request (inference) or one full iteration including host
+    gaps (training), plus slack so the tail complete lands in-trace."""
+    wl = paper_workload(name, 0)
+    iso = isolated_time(wl, dev)
+    if wl.kind == "infer":
+        return iso * 1.25
+    return (iso + wl.n_kernels * wl.host_gap) * 1.05
+
+
+def build(name: str, dev: DeviceModel = A100) -> Trace:
+    """Record one zoo trace from scratch (deterministic — same bits on
+    every rebuild). Inference workloads run as the HP service with a
+    single request at t=0; training workloads run as the only
+    best-effort client."""
+    from repro.core.simulator import simulate
+
+    duration = span(name, dev)
+    rec = TraceRecorder()
+    if name in INFER_NAMES:
+        hp = paper_workload(name, 0, dev)
+        traffic = TrafficTrace(np.asarray([0.0], np.float64), duration)
+        simulate("tally", hp, [], traffic, dev, duration=duration,
+                 recorder=rec)
+    else:
+        be = paper_workload(name, 1, dev)
+        simulate("tally", None, [be], None, dev, duration=duration,
+                 recorder=rec)
+    return rec.finish()
+
+
+def load(name: str, *, data_dir=None, rebuild: bool = False) -> Trace:
+    """The committed zoo trace (built and cached on first use when the
+    NPZ is absent; ``rebuild=True`` forces a fresh recording)."""
+    p = path(name, data_dir)
+    if p.exists() and not rebuild:
+        return Trace.load_npz(p)
+    trace = build(name)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    trace.save_npz(p)
+    return trace
+
+
+def records(name: str, *, data_dir=None) -> List[KernelRecord]:
+    """The zoo trace as ingested-shape ``KernelRecord`` rows — what an
+    nsys export of the same run would yield, but with the FLOP/byte
+    metadata a bare profiler capture lacks (so ``fit_device_model``
+    accepts them). Solo zoo runs are never preempted, so each launch's
+    planned end is its completion clock."""
+    tr = load(name, data_dir=data_dir)
+    out: List[KernelRecord] = []
+    for i in np.flatnonzero(np.isin(tr.kind, (HP_LAUNCH, BE_LAUNCH))):
+        k = tr.kernels[int(tr.kernel[i])]
+        out.append(KernelRecord(
+            name=k.name, start=float(tr.ts[i]),
+            duration=float(tr.value[i] - tr.ts[i]), blocks=k.blocks,
+            flops=k.flops, bytes=k.bytes))
+    return out
+
+
+def workload(name: str, priority: Optional[int] = None, *,
+             source: str = "trace", data_dir=None):
+    """A replayable ``Workload`` rebuilt from the zoo trace.
+
+    ``source="trace"`` reconstructs exactly from the recorded job table
+    (bit-identical kernel stream — the figure benchmarks' trace-driven
+    mode); ``source="records"`` goes through the external-ingest path
+    (``KernelRecord`` rows -> ``trace_workload``), exercising the same
+    plumbing an nsys capture would. ``priority`` defaults to the
+    recorded one (0 for inference services, 1 for training)."""
+    if source == "trace":
+        wl = trace_workload(load(name, data_dir=data_dir))
+    elif source == "records":
+        wl = trace_workload(
+            records(name, data_dir=data_dir), name=name,
+            priority=0 if name in INFER_NAMES else 1,
+            kind="infer" if name in INFER_NAMES else "train")
+    else:
+        raise ValueError(f"source must be 'trace' or 'records', "
+                         f"got {source!r}")
+    if priority is not None and wl.priority != priority:
+        wl = dataclasses.replace(wl, priority=priority)
+    return wl
+
+
+def fit(name: str, *, data_dir=None, **kw) -> CalibrationResult:
+    """Calibrate a ``DeviceModel`` from one zoo trace's ingested records
+    (the full raw-profile -> model loop on a committed artifact)."""
+    return fit_device_model(records(name, data_dir=data_dir),
+                            name=f"zoo:{name}", **kw)

@@ -1,0 +1,269 @@
+"""Trace-at-scale additions: vectorized Chrome export (byte-identical to
+the reference loop), fuzzy kernel-name diffing, the Table-2 trace zoo,
+and calibration fit-quality reporting.
+
+The SQLite ingestion path has its own file (``test_trace_sqlite.py``);
+this one covers everything else the trace-at-scale PR added on top of
+the PR-3 round-trip contract."""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.device_model import A100
+from repro.core.fleet import FleetSimulator, be_job, hp_service
+from repro.core.simulator import simulate
+from repro.core.traffic import TrafficTrace, maf2_like_trace, scale_to_load
+from repro.core.workloads import (INFER_NAMES, isolated_time,
+                                  paper_workload)
+from repro.trace import (TraceRecorder, chrome_json, diff_traces,
+                         edit_distance, fit_device_model, load_chrome,
+                         match_kernel_names, normalize_kernel_name,
+                         to_chrome, write_chrome, zoo)
+from repro.trace.calibrate import samples_from_records
+from repro.trace.ingest import KernelRecord
+from repro.trace.schema import MIGRATE, Trace, _COLUMNS
+
+
+def _record(duration=2.0):
+    hp = paper_workload("resnet50-infer", 0)
+    bes = [paper_workload("gpt2-train", 1)]
+    base = maf2_like_trace(duration=duration, mean_rate=20.0,
+                           burstiness=1.3, level_period=1.0, seed=3)
+    traffic = scale_to_load(base, isolated_time(hp, A100), 0.5)
+    rec = TraceRecorder()
+    simulate("tally", hp, bes, traffic, A100, duration=duration,
+             recorder=rec)
+    return rec.finish()
+
+
+# ---------------------------------------------------------------------------
+# Vectorized Chrome export: byte-identical to the pure-Python reference
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("embed", [True, False])
+def test_chrome_json_byte_identical(embed):
+    trace = _record()
+    assert chrome_json(trace, embed_schema=embed) == \
+        json.dumps(to_chrome(trace, embed_schema=embed))
+
+
+def test_write_chrome_file_byte_identical(tmp_path):
+    trace = _record()
+    fast, ref = tmp_path / "fast.json", tmp_path / "ref.json"
+    write_chrome(trace, fast)
+    with open(ref, "w") as f:
+        json.dump(to_chrome(trace), f)
+    assert fast.read_bytes() == ref.read_bytes()
+
+
+def test_chrome_json_fleet_trace_with_instants():
+    """A fleet trace with migrations (instant events) goes through the
+    same vectorized path byte-identically."""
+    rec = TraceRecorder()
+    fleet = FleetSimulator(2, "least_loaded", horizon=8.0,
+                           check_interval=1.0, min_window=5, recorder=rec)
+    fleet.run([hp_service("svc", paper_workload("resnet50-infer", 0),
+                          load=0.6, seed=4, slo_factor=1.02),
+               be_job("be0", paper_workload("gpt2-train", 1)),
+               be_job("be1", paper_workload("bert-train", 1))])
+    trace = rec.finish()
+    assert chrome_json(trace) == json.dumps(to_chrome(trace))
+    if np.any(trace.kind == MIGRATE):          # exercised the instant path
+        assert '"ph": "i"' in chrome_json(trace)
+
+
+def test_chrome_json_empty_trace():
+    empty = Trace.from_columns({c: [] for c in _COLUMNS}, [], [], {})
+    assert chrome_json(empty) == json.dumps(to_chrome(empty))
+    assert chrome_json(empty, embed_schema=False) == \
+        json.dumps(to_chrome(empty, embed_schema=False))
+
+
+def test_chrome_json_truncated_trace():
+    """Launches whose completes were cut off (e.g. a horizon landing
+    mid-flight) still export identically on both paths."""
+    trace = _record()
+    half = len(trace) // 2
+    cut = Trace.from_columns(
+        {c: getattr(trace, c)[:half] for c in _COLUMNS},
+        trace.kernels, trace.jobs, trace.meta)
+    assert chrome_json(cut) == json.dumps(to_chrome(cut))
+
+
+def test_chrome_json_round_trips(tmp_path):
+    trace = _record()
+    p = tmp_path / "t.json"
+    write_chrome(trace, p)
+    load_chrome(p).assert_equal(trace, meta=True)
+
+
+# ---------------------------------------------------------------------------
+# Fuzzy kernel-name matching
+# ---------------------------------------------------------------------------
+
+
+def test_normalize_kernel_name():
+    assert normalize_kernel_name(
+        "void gemm_kernel<float, 128, true>(float*, int)") == \
+        normalize_kernel_name("gemm_kernel<half, 64, false>(half*, long)")
+    assert normalize_kernel_name("attn_fwd_3") == \
+        normalize_kernel_name("attn_fwd_17")        # uniquing suffix
+    assert normalize_kernel_name("  relu  ") == "relu"
+    assert normalize_kernel_name("a<b<c>>d(e(f))") == "ad"
+    # distinct base names stay distinct
+    assert normalize_kernel_name("conv2d<float>") != \
+        normalize_kernel_name("conv3d<float>")
+
+
+def test_edit_distance():
+    assert edit_distance("", "") == 0
+    assert edit_distance("abc", "abc") == 0
+    assert edit_distance("kitten", "sitting") == 3
+    assert edit_distance("abc", "") == 3
+    # the limit band early-exits with limit + 1
+    assert edit_distance("aaaaaaaa", "bbbbbbbb", limit=3) == 4
+
+
+def test_match_kernel_names():
+    a = ["void gemm<float>(float*)", "relu_2", "softmax"]
+    b = ["gemm<half>(half*)", "relu_9", "softmax", "extra"]
+    m = match_kernel_names(a, b)
+    assert m["void gemm<float>(float*)"] == "gemm<half>(half*)"
+    assert m["relu_2"] == "relu_9"
+    assert m["softmax"] == "softmax"                # exact match preferred
+    # an A-name with no candidate bucket stays unmatched (absent from
+    # the map; diff falls back to the raw name)
+    assert "lonely" not in match_kernel_names(["lonely"], ["other"])
+
+
+def _renamed_copy(trace):
+    """Simulated recompilation: template args and uniquing suffixes
+    change, base names survive."""
+    renamed = [dataclasses.replace(
+        k, name=f"void {k.name}<half, 256, true>(half*, int)_{i + 3}")
+        for i, k in enumerate(trace.kernels)]
+    return Trace(ts=trace.ts, kind=trace.kind, device=trace.device,
+                 job=trace.job, kernel=trace.kernel, value=trace.value,
+                 aux=trace.aux, kernels=renamed, jobs=trace.jobs,
+                 meta=trace.meta)
+
+
+def test_fuzzy_diff_realigns_renamed_kernels():
+    trace = _record()
+    other = _renamed_copy(trace)
+
+    exact = diff_traces(trace, other)
+    assert not exact.identical                  # exact mode sees renames
+
+    fuzzy = diff_traces(trace, other, fuzzy=True)
+    assert fuzzy.identical                      # nothing but names changed
+    assert fuzzy.fuzzy
+    assert fuzzy.renamed_kernels > 0
+    assert fuzzy.match_fraction >= 0.95         # the acceptance criterion
+    assert "matched through renames" in fuzzy.format()
+
+
+def test_exact_diff_behavior_unchanged():
+    trace = _record()
+    d = diff_traces(trace, trace)
+    assert d.identical and not d.fuzzy and d.renamed_kernels == 0
+    assert d.match_fraction == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Trace zoo
+# ---------------------------------------------------------------------------
+
+
+def test_zoo_covers_table2_and_artifacts_exist():
+    from repro.core.workloads import TRAIN_NAMES
+    assert zoo.names() == INFER_NAMES + TRAIN_NAMES
+    for name in zoo.names():
+        assert zoo.path(name).exists(), f"zoo NPZ missing for {name}"
+    with pytest.raises(KeyError):
+        zoo.path("not-a-workload")
+
+
+@pytest.mark.parametrize("name", ["resnet50-infer", "pointnet-train"])
+def test_zoo_rebuild_determinism(name):
+    zoo.build(name).assert_equal(zoo.load(name), meta=True)
+
+
+@pytest.mark.parametrize("fast", [True, False])
+def test_zoo_replays_bit_exact_both_engines(fast):
+    from repro.trace import replay
+    trace = zoo.load("bert-infer")
+    _, rt = replay(trace, fast=fast)
+    rt.assert_equal(trace)
+
+
+@pytest.mark.parametrize("name", ["resnet50-infer", "gpt2-train"])
+def test_zoo_workload_matches_paper_workload(name):
+    ref = paper_workload(name, 0 if name in INFER_NAMES else 1)
+    wl = zoo.workload(name)
+    assert wl.priority == ref.priority and wl.kind == ref.kind
+    assert wl.n_kernels == ref.n_kernels
+    for kz, kr in zip(wl.iteration(0), ref.iteration(0)):
+        assert (kz.flops, kz.bytes, kz.blocks) == \
+            (kr.flops, kr.bytes, kr.blocks)
+    assert isolated_time(wl, A100) == isolated_time(ref, A100)
+
+
+def test_zoo_workload_records_source_simulates():
+    wl = zoo.workload("resnet50-infer", 0, source="records")
+    traffic = TrafficTrace(np.asarray([0.0], np.float64), 0.2)
+    book = simulate("tally", wl, [], traffic, A100, duration=0.2)
+    assert len(book.latency.latencies) == 1
+    with pytest.raises(ValueError):
+        zoo.workload("resnet50-infer", source="bogus")
+
+
+def test_zoo_fit_recovers_device():
+    res = zoo.fit("resnet50-infer")
+    assert res.max_rel_err < 1e-9
+    assert abs(res.device.peak_flops / A100.peak_flops - 1.0) < 1e-9
+
+
+def test_zoo_dir_env_override(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_ZOO_DIR", str(tmp_path))
+    assert zoo.zoo_dir() == tmp_path
+    assert zoo.path("resnet50-infer") == tmp_path / "resnet50-infer.npz"
+
+
+# ---------------------------------------------------------------------------
+# Calibration fit-quality report
+# ---------------------------------------------------------------------------
+
+
+def test_fit_quality_machine_precision():
+    res = zoo.fit("bert-infer")
+    assert res.residual_rms < 1e-12
+    # stderr is in model units; compare relative to the fitted value for
+    # the rate terms, absolute (seconds) for the overhead
+    for term, scale in (("peak_flops", res.device.peak_flops),
+                        ("hbm_bw", res.device.hbm_bw)):
+        if term in res.stderr:
+            assert res.stderr[term] / scale < 1e-9
+    assert res.stderr.get("launch_overhead", 0.0) < 1e-12
+    assert "residual RMS" in res.report()
+
+
+def test_fit_quality_noisy_records():
+    rng = np.random.default_rng(11)
+    base = zoo.records("resnet50-infer")
+    noisy = [dataclasses.replace(
+        r, duration=r.duration * float(1.0 + 0.05 * rng.standard_normal()))
+        for r in base]
+    res = fit_device_model(noisy)
+    assert res.residual_rms > 0.0
+    assert res.stderr.get("launch_overhead", 0.0) > 0.0
+    assert "±" in res.report()
+
+
+def test_samples_from_records_requires_metadata():
+    bare = [KernelRecord(name="k", start=0.0, duration=1e-4, blocks=8)]
+    with pytest.raises(ValueError, match="no FLOP/byte metadata"):
+        samples_from_records(bare)

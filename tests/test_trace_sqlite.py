@@ -1,0 +1,319 @@
+"""nsys SQLite ingestion: bounded-memory streaming, CSV parity, the
+IngestError/strict=False contract, SQL-side aggregation, and the
+locale-tolerant CSV cell parser.
+
+The headline acceptance here: a synthetic multi-million-row nsys SQLite
+fixture (generated on the fly, never committed) ingests through a
+bounded fetchmany cursor — peak Python-side footprint is one chunk, and
+the chunking is asserted, not assumed — and produces the exact same
+``IngestedRecords`` as the equivalent CSV export."""
+import csv
+import math
+import sqlite3
+
+import numpy as np
+import pytest
+
+from repro.core.device_model import A100
+from repro.trace import IngestError, read_kernel_csv, trace_workload
+from repro.trace.ingest import _to_float
+from repro.trace.sqlite import (is_sqlite, read_kernel_sqlite,
+                                sqlite_summary, write_kernel_sqlite)
+
+_NAMES = (
+    "ampere_sgemm_128x128_tn",
+    "flash_fwd_kernel<cutlass::half_t, 128, 64>",
+    "void at::native::vectorized_elementwise_kernel<4, ...>",
+    "triton_poi_fused_add_relu_0",
+    "void cudnn::ops::nchwToNhwcKernel<...>",
+)
+
+
+def _rows_ns(n: int, seed: int = 0):
+    """(start_ns, dur_ns, gx, gy, name) integer tuples, start-sorted."""
+    rng = np.random.default_rng(seed)
+    starts = np.cumsum(rng.integers(1_000, 900_000, size=n)) + 1_000_000
+    durs = rng.integers(5_000, 800_000, size=n)
+    gx = rng.integers(1, 256, size=n)
+    gy = rng.integers(1, 16, size=n)
+    names = [_NAMES[i % len(_NAMES)] for i in range(n)]
+    return [(int(s), int(d), int(x), int(y), nm)
+            for s, d, x, y, nm in zip(starts, durs, gx, gy, names)]
+
+
+def _write_csv(path, rows):
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["Start (ns)", "Duration (ns)", "GrdX", "GrdY", "GrdZ",
+                    "Device", "Strm", "Name"])
+        for s, d, x, y, nm in rows:
+            w.writerow([s, d, x, y, 1, 0, 7, nm])
+
+
+def _write_sqlite(path, rows, *, batch=50_000):
+    """The canonical nsys layout, inserted in batches (fixture-scale
+    writer — fast enough for millions of rows)."""
+    con = sqlite3.connect(str(path))
+    con.execute("CREATE TABLE CUPTI_ACTIVITY_KIND_KERNEL ("
+                "start INTEGER, end INTEGER, deviceId INTEGER, "
+                "gridX INTEGER, gridY INTEGER, gridZ INTEGER, "
+                "shortName INTEGER)")
+    con.execute("CREATE TABLE StringIds (id INTEGER PRIMARY KEY, "
+                "value TEXT)")
+    ids = {}
+    for _, _, _, _, nm in rows:
+        if nm not in ids:
+            ids[nm] = len(ids) + 1
+            con.execute("INSERT INTO StringIds VALUES (?, ?)",
+                        (ids[nm], nm))
+    it = ((s, s + d, 0, x, y, 1, ids[nm]) for s, d, x, y, nm in rows)
+    while True:
+        chunk = []
+        for t in it:
+            chunk.append(t)
+            if len(chunk) >= batch:
+                break
+        if not chunk:
+            break
+        con.executemany(
+            "INSERT INTO CUPTI_ACTIVITY_KIND_KERNEL VALUES "
+            "(?, ?, ?, ?, ?, ?, ?)", chunk)
+    con.commit()
+    con.close()
+
+
+# ---------------------------------------------------------------------------
+# CSV parity + bounded memory
+# ---------------------------------------------------------------------------
+
+
+def test_sqlite_matches_csv(tmp_path):
+    rows = _rows_ns(5_000)
+    _write_csv(tmp_path / "k.csv", rows)
+    _write_sqlite(tmp_path / "k.sqlite", rows)
+    from_csv = read_kernel_csv(tmp_path / "k.csv")
+    from_db = read_kernel_sqlite(tmp_path / "k.sqlite", chunk_size=1024)
+    assert len(from_db) == len(from_csv) == 5_000
+    assert list(from_db) == list(from_csv)       # KernelRecord equality
+    assert from_db.skipped == 0
+
+
+def test_bounded_memory_chunking(tmp_path):
+    n, chunk = 30_000, 1_024
+    _write_sqlite(tmp_path / "k.sqlite", _rows_ns(n))
+    rec = read_kernel_sqlite(tmp_path / "k.sqlite", chunk_size=chunk)
+    assert len(rec) == n
+    # the cursor streamed: many small chunks, never the whole table
+    assert rec.stats.chunk_size == chunk
+    assert rec.stats.chunks == math.ceil(n / chunk)
+    assert rec.stats.peak_chunk_rows <= chunk
+    assert rec.stats.rows == n
+
+
+@pytest.mark.slow
+def test_multimillion_rows_bounded_and_csv_exact(tmp_path):
+    """The at-scale acceptance: millions of rows stream through a
+    bounded cursor and match the equivalent CSV record for record."""
+    n, chunk = 2_000_000, 65_536
+    rows = _rows_ns(n, seed=1)
+    _write_sqlite(tmp_path / "big.sqlite", rows)
+    rec = read_kernel_sqlite(tmp_path / "big.sqlite", chunk_size=chunk)
+    assert len(rec) == n
+    assert rec.stats.chunks == math.ceil(n / chunk)
+    assert rec.stats.peak_chunk_rows <= chunk    # never the full table
+    _write_csv(tmp_path / "big.csv", rows)
+    from_csv = read_kernel_csv(tmp_path / "big.csv")
+    assert list(rec) == list(from_csv)
+
+
+def test_limit_preview(tmp_path):
+    _write_sqlite(tmp_path / "k.sqlite", _rows_ns(2_000))
+    rec = read_kernel_sqlite(tmp_path / "k.sqlite", limit=100)
+    assert len(rec) == 100
+
+
+# ---------------------------------------------------------------------------
+# strict / IngestError contract on the SQLite path
+# ---------------------------------------------------------------------------
+
+
+def _corrupt_db(path, n_good=200):
+    rows = _rows_ns(n_good)
+    _write_sqlite(path, rows)
+    con = sqlite3.connect(str(path))
+    # SQLite is dynamically typed: a broken writer can leave NULLs, TEXT
+    # in INTEGER columns, or dangling StringIds references
+    con.execute("INSERT INTO CUPTI_ACTIVITY_KIND_KERNEL VALUES "
+                "(NULL, 5000, 0, 1, 1, 1, 1)")              # NULL start
+    con.execute("INSERT INTO CUPTI_ACTIVITY_KIND_KERNEL VALUES "
+                "('garbage', 5000, 0, 1, 1, 1, 1)")         # TEXT start
+    con.execute("INSERT INTO CUPTI_ACTIVITY_KIND_KERNEL VALUES "
+                "(7000, 5000, 0, 1, 1, 1, 1)")              # end < start
+    con.execute("INSERT INTO CUPTI_ACTIVITY_KIND_KERNEL VALUES "
+                "(8000, 9000, 0, 1, 1, 1, 999999)")         # dangling name
+    con.commit()
+    con.close()
+    return n_good
+
+
+def test_strict_raises_located(tmp_path):
+    p = tmp_path / "bad.sqlite"
+    _corrupt_db(p)
+    with pytest.raises(IngestError) as ei:
+        read_kernel_sqlite(p)
+    err = ei.value
+    assert err.path == str(p)
+    assert err.row is not None and err.row >= 1
+    assert err.column in ("start", "end", "name", "grid")
+    assert str(p) in str(err) and "row" in str(err)
+
+
+def test_strict_false_skips_and_counts(tmp_path):
+    p = tmp_path / "bad.sqlite"
+    n_good = _corrupt_db(p)
+    rec = read_kernel_sqlite(p, strict=False, chunk_size=64)
+    assert rec.skipped == 4
+    assert len(rec) == n_good
+    starts = [r.start for r in rec]
+    assert starts == sorted(starts)              # sorted contract survives
+    assert all(r.duration >= 0 for r in rec)
+
+
+def test_skipped_survives_trace_workload(tmp_path):
+    p = tmp_path / "bad.sqlite"
+    _corrupt_db(p)
+    w = trace_workload(p, priority=1, strict=False)
+    assert w.ingest_skipped == 4
+    with pytest.raises(IngestError):
+        trace_workload(p, priority=1)            # strict default still raises
+
+
+def test_trace_workload_sqlite_dispatch(tmp_path):
+    rows = _rows_ns(64)
+    p = tmp_path / "k.sqlite"
+    _write_sqlite(p, rows)
+    w = trace_workload(p, priority=1)
+    assert w.n_kernels == 64
+    assert w.ingest_skipped == 0
+    recs = read_kernel_sqlite(p)
+    for r, k in zip(recs, w.iteration(0)):
+        assert k.duration(A100) == pytest.approx(r.duration, rel=1e-12)
+    # magic sniffing: same database under a suffix-less name still routes
+    # to the SQLite reader
+    p2 = tmp_path / "capture"
+    p2.write_bytes(p.read_bytes())
+    assert is_sqlite(p2)
+    assert trace_workload(p2, priority=1).n_kernels == 64
+
+
+def test_rejects_non_sqlite(tmp_path):
+    p = tmp_path / "notdb.sqlite"
+    p.write_text("hello")
+    with pytest.raises(IngestError):
+        read_kernel_sqlite(p)
+    with pytest.raises(IngestError):
+        read_kernel_sqlite(tmp_path / "missing.sqlite")
+
+
+def test_no_kernel_table(tmp_path):
+    p = tmp_path / "empty.sqlite"
+    con = sqlite3.connect(str(p))
+    con.execute("CREATE TABLE unrelated (x INTEGER)")
+    con.commit()
+    con.close()
+    with pytest.raises(IngestError) as ei:
+        read_kernel_sqlite(p)
+    assert "kernel activity" in str(ei.value)
+
+
+# ---------------------------------------------------------------------------
+# SQL-side aggregation
+# ---------------------------------------------------------------------------
+
+
+def test_sqlite_summary_aggregates_sql_side(tmp_path):
+    rows = _rows_ns(1_000)
+    p = tmp_path / "k.sqlite"
+    _write_sqlite(p, rows)
+    summary = sqlite_summary(p)
+    byname = {s["name"]: s for s in summary}
+    assert set(byname) == set(_NAMES)
+    for nm in _NAMES:
+        mine = [(d, ) for s, d, x, y, n2 in rows if n2 == nm]
+        assert byname[nm]["count"] == len(mine)
+        assert byname[nm]["total_s"] == pytest.approx(
+            sum(d for (d, ) in mine) * 1e-9, rel=1e-12)
+    totals = [s["total_s"] for s in summary]
+    assert totals == sorted(totals, reverse=True)
+    assert len(sqlite_summary(p, top=2)) == 2
+
+
+def test_write_kernel_sqlite_round_trip(tmp_path):
+    src = read_kernel_sqlite(_mkdb(tmp_path, 300))
+    p2 = tmp_path / "resharded.sqlite"
+    assert write_kernel_sqlite(p2, src) == 300
+    again = read_kernel_sqlite(p2)
+    assert list(again) == list(src)
+
+
+def _mkdb(tmp_path, n):
+    p = tmp_path / "src.sqlite"
+    _write_sqlite(p, _rows_ns(n))
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Locale-tolerant CSV numeric cells (satellite regression)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cell,want", [
+    ("1234", 1234.0),
+    ("1,234", 1234.0),                  # US thousands
+    ("1,234,567", 1234567.0),
+    ("1,234.56", 1234.56),
+    ("1234,56", 1234.56),               # EU decimal comma
+    ("1.234,56", 1234.56),              # EU grouping + decimal comma
+    ("123,45", 123.45),
+    ("1 234 567", 1234567.0),           # space thousands
+    ("1 234", 1234.0),             # narrow NBSP (French locale)
+    ("1 234,5", 1234.5),           # NBSP + decimal comma
+    ("12'345", 12345.0),                # Swiss apostrophe
+    ("-1,234.5", -1234.5),
+    ("1.5e+03", 1500.0),
+    ("", 0.0),
+    ("  42  ", 42.0),
+])
+def test_to_float_locales(cell, want):
+    assert _to_float(cell) == want
+
+
+@pytest.mark.parametrize("cell", ["12,34,5", "abc", "1.2.3"])
+def test_to_float_rejects_garbage(cell):
+    with pytest.raises(ValueError):
+        _to_float(cell)
+
+
+def test_csv_locale_cells_and_malformed_fixture(tmp_path):
+    """Real nsys exports emit locale-formatted numbers; they must parse
+    to the measured values, and a genuinely malformed cell must raise a
+    located IngestError through strict=True (and skip-and-count through
+    strict=False)."""
+    p = tmp_path / "locale.csv"
+    p.write_text(
+        "Start (ns),Duration (ns),GrdX,Name\n"
+        '"1,000,000","697,916",64,sgemm\n'
+        '"2,000,000","1234,5",48,flash\n'        # EU decimal comma
+        '"3 000 000","90 194",96,softmax\n'      # space thousands
+        '"4,000,000","12,34,5",8,broken\n'       # malformed
+        '"5,000,000","100,000",8,tail\n')
+    with pytest.raises(IngestError) as ei:
+        read_kernel_csv(p)
+    assert ei.value.row == 5                     # 1-based file line
+    assert ei.value.column == "Duration (ns)"
+    recs = read_kernel_csv(p, strict=False)
+    assert recs.skipped == 1
+    assert [r.name for r in recs] == ["sgemm", "flash", "softmax", "tail"]
+    assert recs[0].duration == pytest.approx(697916e-9, rel=1e-12)
+    assert recs[1].duration == pytest.approx(1234.5e-9, rel=1e-12)
+    assert recs[2].duration == pytest.approx(90194e-9, rel=1e-12)
